@@ -1,0 +1,52 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time of a jitted callable (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def ns_per_elem(seconds: float, n: int) -> float:
+    return seconds / n * 1e9
+
+
+def save_results(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def uniform(n, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (rng.random(n) + 1.0).astype(dtype)          # U[1, 2)
+
+
+def expo(n, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return rng.exponential(1.0, n).astype(dtype)        # Exp(1)
+
+
+def keys(n, n_groups, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, n_groups, n).astype(np.int32)

@@ -1,0 +1,58 @@
+"""Paper Table II: accuracy of conventional vs reproducible summation.
+
+Measures *actual* max abs error (not just bounds) against math.fsum (exact)
+for U[1,2) and Exp(1) inputs in double precision, RSUM L=1..3; plus the
+float32 production configuration.  Requires x64 (enabled by run.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import expo, save_results, uniform
+from repro.core import accumulator as acc_mod
+from repro.core.types import ReproSpec
+
+
+def run(quick: bool = True):
+    sizes = [10**3, 10**6] if not quick else [10**3, 10**5]
+    rows = []
+    for dist_name, gen in [("U[1,2)", uniform), ("Exp(1)", expo)]:
+        for n in sizes:
+            x = gen(n, seed=n, dtype=np.float64)
+            exact = math.fsum(x)
+            conv = float(np.float64(x.astype(np.float64).sum()))
+            row = {"dist": dist_name, "n": n,
+                   "conv_err": abs(conv - exact)}
+            for L in (1, 2, 3):
+                spec = ReproSpec(dtype=jnp.float64, L=L)
+                got = float(acc_mod.finalize(
+                    acc_mod.from_values(x, spec), spec))
+                row[f"rsum_L{L}_err"] = abs(got - exact)
+            spec32 = ReproSpec(dtype=jnp.float32, L=2)
+            got32 = float(acc_mod.finalize(
+                acc_mod.from_values(x.astype(np.float32), spec32), spec32))
+            conv32 = float(np.float32(x.astype(np.float32).sum()))
+            exact32 = math.fsum(x.astype(np.float32))
+            row["conv32_err"] = abs(conv32 - exact32)
+            row["rsum32_L2_err"] = abs(got32 - exact32)
+            rows.append(row)
+
+    print("\n== Table II analogue: max abs error vs exact (fsum) ==")
+    print(f"{'dist':8} {'n':>8} {'conv(f64)':>12} {'L=1':>12} {'L=2':>12} "
+          f"{'L=3':>12} {'conv(f32)':>12} {'repro f32 L2':>12}")
+    for r in rows:
+        print(f"{r['dist']:8} {r['n']:>8} {r['conv_err']:>12.3e} "
+              f"{r['rsum_L1_err']:>12.3e} {r['rsum_L2_err']:>12.3e} "
+              f"{r['rsum_L3_err']:>12.3e} {r['conv32_err']:>12.3e} "
+              f"{r['rsum32_L2_err']:>12.3e}")
+    save_results("accuracy", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    run(quick=False)

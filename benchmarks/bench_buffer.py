@@ -1,0 +1,57 @@
+"""Paper Fig. 8/12: buffer-size (renorm chunk) sweep vs group count.
+
+The renormalization chunk is the TPU analogue of the paper's summation
+buffer size bsz: larger chunks amortize carry propagation, but blow the
+working set (here: the (G, L) int table revisited per chunk vs vectorized
+extraction temporaries).  Also checks the Eq. 4-style prediction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import keys, ns_per_elem, save_results, timeit, uniform
+from repro.core import buffers as buf_mod
+from repro.core import segment as seg_mod
+from repro.core.types import ReproSpec
+
+
+def run(quick: bool = True):
+    n = 2**17 if quick else 2**21
+    vals = jnp.asarray(uniform(n, seed=5))
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    group_counts = [2**2, 2**8, 2**14] if quick else \
+        [2**2, 2**6, 2**10, 2**14, 2**18]
+    chunks = [64, 256, 1024, 4096]
+    rows = []
+    for g in group_counts:
+        ids = jnp.asarray(keys(n, g, seed=g + 1))
+        row = {"n_groups": g, "predicted_bsz": buf_mod.optimal_bsz(
+            g, 1, 4, cache_bytes=buf_mod.LLC_BYTES_PER_CORE)}
+        best = None
+        for c in chunks:
+            f = jax.jit(functools.partial(
+                seg_mod.segment_rsum, num_segments=g, spec=spec,
+                method="scatter", chunk=c))
+            t = ns_per_elem(timeit(f, vals, ids, iters=3), n)
+            row[f"chunk_{c}_ns"] = t
+            if best is None or t < best[1]:
+                best = (c, t)
+        row["best_chunk"] = best[0]
+        rows.append(row)
+
+    print("\n== Fig. 8/12 analogue: renorm-chunk (bsz) sweep ==")
+    hdr = " ".join(f"c={c:>5}" for c in chunks)
+    print(f"{'groups':>8} {hdr} {'best':>6} {'Eq4-pred':>9}")
+    for r in rows:
+        vals_s = " ".join(f"{r[f'chunk_{c}_ns']:7.2f}" for c in chunks)
+        print(f"{r['n_groups']:>8} {vals_s} {r['best_chunk']:>6} "
+              f"{r['predicted_bsz']:>9}")
+    save_results("buffer", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

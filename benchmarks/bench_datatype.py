@@ -1,0 +1,61 @@
+"""Paper Fig. 4: aggregation with drop-in reproducible types, 16 groups.
+
+Hash aggregation over 16 groups (cache effects excluded, per the paper)
+comparing float32, DECIMAL(9)/DECIMAL(18), and repro<float32, L> for
+L = 1..4 as the intermediate-aggregate type (scatter drop-in mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import keys, ns_per_elem, save_results, timeit, uniform
+from repro.core import accumulator as acc_mod
+from repro.core import segment as seg_mod
+from repro.core.types import ReproSpec
+from repro.numerics import DecimalSpec, decimal_segment_sum
+
+G = 16
+
+
+def run(quick: bool = True):
+    n = 2**18 if quick else 2**24
+    vals = jnp.asarray(uniform(n, seed=2))
+    ids = jnp.asarray(keys(n, G, seed=3))
+
+    base = jax.jit(lambda v, i: jax.ops.segment_sum(v, i, num_segments=G))
+    t_base = timeit(base, vals, ids)
+    rows = [{"dtype": "float32", "ns_per_elem": ns_per_elem(t_base, n),
+             "slowdown": 1.0}]
+
+    for p, name in [(9, "DECIMAL(9)"), (18, "DECIMAL(18)")]:
+        d = DecimalSpec(precision=p, scale=4)
+        f = jax.jit(functools.partial(decimal_segment_sum, num_segments=G,
+                                      dspec=d))
+        t = timeit(f, vals, ids)
+        rows.append({"dtype": name, "ns_per_elem": ns_per_elem(t, n),
+                     "slowdown": t / t_base})
+
+    for L in (1, 2, 3, 4):
+        spec = ReproSpec(dtype=jnp.float32, L=L)
+        f = jax.jit(functools.partial(seg_mod.segment_rsum, num_segments=G,
+                                      spec=spec, method="scatter"))
+        t = timeit(f, vals, ids, iters=3)
+        rows.append({"dtype": f"repro<f32,{L}>",
+                     "ns_per_elem": ns_per_elem(t, n),
+                     "slowdown": t / t_base})
+
+    print(f"\n== Fig. 4 analogue: drop-in repro types, {G} groups ==")
+    print(f"{'dtype':16} {'ns/elem':>10} {'slowdown':>9}")
+    for r in rows:
+        print(f"{r['dtype']:16} {r['ns_per_elem']:>10.2f} "
+              f"{r['slowdown']:>9.2f}")
+    save_results("datatype", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

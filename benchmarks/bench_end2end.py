@@ -1,0 +1,67 @@
+"""Paper Table IV: end-to-end overhead of reproducibility in a real system.
+
+MonetDB Query 1 becomes a training step of a reduced model: the aggregation
+operators are the gradient accumulation + reduction (and optionally the
+embedding-gradient GROUPBY).  Reports step time relative to the
+conventional float pipeline — the number that corresponds to the paper's
+2.7 % MonetDB overhead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks._util import save_results
+from repro import configs as registry
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import build_batch, train_loop
+from repro.launch.train_step import TrainConfig
+from repro.data.pipeline import DataConfig
+from repro.models.config import ShapeConfig
+from repro.optim import adamw as adamw_mod
+
+
+def _time_mode(cfg, shape, mesh, grad_mode, repro_embed=False, steps=6):
+    tc = TrainConfig(grad_mode=grad_mode, mb_size=1,
+                     repro_embed=repro_embed,
+                     adamw=adamw_mod.AdamWConfig(total_steps=steps))
+    t0 = time.time()
+    losses = train_loop(cfg, shape, tc, mesh, steps=steps, log_every=10**9)
+    warm = time.time() - t0
+    # steady-state: time 4 more steps post-compile
+    t0 = time.time()
+    losses = train_loop(cfg, shape, tc, mesh, steps=steps, log_every=10**9)
+    return (time.time() - t0) / steps, losses[-1][1]
+
+
+def run(quick: bool = True):
+    cfg = registry.get_config("smollm-135m").reduced()
+    shape = ShapeConfig("bench", seq_len=128, global_batch=8, kind="train")
+    mesh = make_host_mesh(1, 1)
+    steps = 4 if quick else 10
+
+    rows = []
+    base_t, base_loss = _time_mode(cfg, shape, mesh, "baseline", steps=steps)
+    rows.append({"mode": "float (baseline)", "step_s": base_t,
+                 "overhead_pct": 0.0})
+    for mode, embed in [("repro", False), ("repro_zero2", False),
+                        ("repro", True)]:
+        t, loss = _time_mode(cfg, shape, mesh, mode, repro_embed=embed,
+                             steps=steps)
+        label = mode + ("+repro_embed" if embed else "")
+        rows.append({"mode": label, "step_s": t,
+                     "overhead_pct": 100.0 * (t - base_t) / base_t})
+
+    print("\n== Table IV analogue: end-to-end training-step overhead ==")
+    print(f"{'mode':24} {'step_s':>9} {'overhead %':>11}")
+    for r in rows:
+        print(f"{r['mode']:24} {r['step_s']:>9.3f} "
+              f"{r['overhead_pct']:>10.1f}%")
+    save_results("end2end", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,74 @@
+"""Paper Fig. 7 / Fig. 10 / Table III: GROUPBY across group counts.
+
+Compares float32 (non-reproducible baseline), DECIMAL, and the repro
+strategies (scatter = drop-in §IV; sort = PartitionAndAggregate §V;
+onehot = MXU summation-buffer fast path) across n_groups, reporting
+slowdown vs float32 and the geometric-mean slowdown (Table III analogue).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import keys, ns_per_elem, save_results, timeit, uniform
+from repro.core import segment as seg_mod
+from repro.core.types import ReproSpec
+from repro.numerics import DecimalSpec, decimal_segment_sum
+
+
+def run(quick: bool = True):
+    n = 2**17 if quick else 2**22
+    group_counts = [2**k for k in (2, 6, 10, 14)] if quick else \
+        [2**k for k in range(2, 21, 2)]
+    vals = jnp.asarray(uniform(n, seed=4))
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    rows = []
+    for g in group_counts:
+        ids = jnp.asarray(keys(n, g, seed=g))
+        base = jax.jit(
+            lambda v, i: jax.ops.segment_sum(v, i, num_segments=g))
+        t_base = timeit(base, vals, ids, iters=3)
+        row = {"n_groups": g, "float32_ns": ns_per_elem(t_base, n)}
+
+        d = DecimalSpec(precision=9, scale=4)
+        f = jax.jit(functools.partial(decimal_segment_sum, num_segments=g,
+                                      dspec=d))
+        row["decimal9_slowdown"] = timeit(f, vals, ids, iters=3) / t_base
+
+        for method in ("scatter", "sort", "onehot"):
+            if method == "onehot" and g > 2**12:
+                row[f"{method}_slowdown"] = None   # dense matmul impractical
+                continue
+            f = jax.jit(functools.partial(
+                seg_mod.segment_rsum, num_segments=g, spec=spec,
+                method=method))
+            row[f"{method}_slowdown"] = timeit(f, vals, ids, iters=3) / t_base
+        rows.append(row)
+
+    def geomean(key):
+        xs = [r[key] for r in rows if r.get(key)]
+        return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else None
+
+    summary = {f"geomean_{m}": geomean(f"{m}_slowdown")
+               for m in ("scatter", "sort", "onehot", "decimal9")}
+
+    print("\n== Fig. 7/10 analogue: GROUPBY slowdown vs float32 ==")
+    print(f"{'groups':>8} {'f32 ns/el':>10} {'decimal':>8} {'scatter':>8} "
+          f"{'sort':>8} {'onehot':>8}")
+    for r in rows:
+        fmt = lambda v: f"{v:8.2f}" if v else "       -"
+        print(f"{r['n_groups']:>8} {r['float32_ns']:>10.2f} "
+              f"{fmt(r['decimal9_slowdown'])} {fmt(r['scatter_slowdown'])} "
+              f"{fmt(r['sort_slowdown'])} {fmt(r['onehot_slowdown'])}")
+    print("Table III analogue (geomean slowdown):",
+          {k: round(v, 2) for k, v in summary.items() if v})
+    save_results("groupby", {"rows": rows, "summary": summary})
+    return rows, summary
+
+
+if __name__ == "__main__":
+    run(quick=False)

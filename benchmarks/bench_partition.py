@@ -1,0 +1,50 @@
+"""Paper Fig. 9: partitioning depth — direct aggregation vs partition-first.
+
+sort = one radix-partition level (d=1 analogue), scatter = no partitioning
+(d=0).  The crossover vs group count mirrors the paper's Fig. 9 trade-off:
+partitioning costs a pass but buys locality once the table outgrows cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import keys, ns_per_elem, save_results, timeit, uniform
+from repro.core import segment as seg_mod
+from repro.core.types import ReproSpec
+
+
+def run(quick: bool = True):
+    n = 2**17 if quick else 2**22
+    vals = jnp.asarray(uniform(n, seed=6))
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    group_counts = [2**4, 2**10, 2**16] if quick else \
+        [2**k for k in range(4, 22, 2)]
+    rows = []
+    for g in group_counts:
+        ids = jnp.asarray(keys(n, g, seed=g + 2))
+        row = {"n_groups": g}
+        for method, label in (("scatter", "d0_direct"),
+                              ("sort", "d1_partition_first")):
+            f = jax.jit(functools.partial(
+                seg_mod.segment_rsum, num_segments=g, spec=spec,
+                method=method))
+            row[f"{label}_ns"] = ns_per_elem(timeit(f, vals, ids, iters=3), n)
+        row["partition_wins"] = row["d1_partition_first_ns"] < \
+            row["d0_direct_ns"]
+        rows.append(row)
+
+    print("\n== Fig. 9 analogue: partition depth crossover ==")
+    print(f"{'groups':>8} {'d=0 ns/el':>10} {'d=1 ns/el':>10} {'winner':>10}")
+    for r in rows:
+        w = "d=1" if r["partition_wins"] else "d=0"
+        print(f"{r['n_groups']:>8} {r['d0_direct_ns']:>10.2f} "
+              f"{r['d1_partition_first_ns']:>10.2f} {w:>10}")
+    save_results("partition", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,74 @@
+"""Paper Fig. 6: RSUM variants vs conventional sum, by chunk size.
+
+Chunked invocation mimics how GROUPBY switches between groups: state is
+stored/reloaded every c values.  Reports slowdown vs jnp.sum (CONV) for
+RSUM SCALAR (Alg.2), RSUM SIMD (Alg.3) chunked, SIMD(c=inf), and the
+lattice fast path (beyond-paper; also what the Pallas kernel computes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import ns_per_elem, save_results, timeit, uniform
+from repro.core import accumulator as acc_mod
+from repro.core import rsum as rsum_mod
+from repro.core.types import ReproSpec
+
+
+def run(quick: bool = True):
+    n = 2**16 if quick else 2**22
+    x = jnp.asarray(uniform(n, seed=1))
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+
+    conv = jax.jit(lambda v: jnp.sum(v))
+    t_conv = timeit(conv, x)
+
+    rows = [{"variant": "conv", "chunk": None,
+             "ns_per_elem": ns_per_elem(t_conv, n), "slowdown": 1.0}]
+
+    # faithful Alg.2 (element scan) — small n, extrapolated per-element cost
+    n_scalar = 2**12
+    xs = x[:n_scalar]
+    scal = jax.jit(functools.partial(rsum_mod.rsum_scalar, spec=spec))
+    t = timeit(scal, xs, iters=3)
+    rows.append({"variant": "scalar(Alg2)", "chunk": None,
+                 "ns_per_elem": ns_per_elem(t, n_scalar),
+                 "slowdown": ns_per_elem(t, n_scalar)
+                 / ns_per_elem(t_conv, n)})
+
+    for c in (64, 256, 1024, 4096, 16384):
+        if c > n:
+            continue
+        f = jax.jit(functools.partial(rsum_mod.rsum_simd_chunked,
+                                      spec=spec, c=c, V=8))
+        t = timeit(f, x, iters=3)
+        rows.append({"variant": "simd(Alg3)", "chunk": c,
+                     "ns_per_elem": ns_per_elem(t, n),
+                     "slowdown": t / t_conv})
+
+    f_inf = jax.jit(functools.partial(rsum_mod.rsum_simd, spec=spec, V=8))
+    t = timeit(f_inf, x, iters=3)
+    rows.append({"variant": "simd(c=inf)", "chunk": None,
+                 "ns_per_elem": ns_per_elem(t, n), "slowdown": t / t_conv})
+
+    fast = jax.jit(lambda v: acc_mod.finalize(
+        acc_mod.from_values(v, spec), spec))
+    t = timeit(fast, x)
+    rows.append({"variant": "lattice fast path", "chunk": None,
+                 "ns_per_elem": ns_per_elem(t, n), "slowdown": t / t_conv})
+
+    print("\n== Fig. 6 analogue: RSUM slowdown vs conventional sum ==")
+    print(f"{'variant':20} {'chunk':>8} {'ns/elem':>10} {'slowdown':>9}")
+    for r in rows:
+        print(f"{r['variant']:20} {str(r['chunk'] or '-'):>8} "
+              f"{r['ns_per_elem']:>10.2f} {r['slowdown']:>9.2f}")
+    save_results("rsum", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,249 @@
+"""Trip-count-corrected cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+undercounts scanned programs (scan-over-layers, microbatch scan, chunked
+loss) by their trip counts.  This module parses the optimized HLO text,
+builds the computation call graph, reads while trip counts from
+``backend_config={"known_trip_count":...}`` (fallback: the condition's
+limit constant), and accumulates per-computation costs scaled by the
+product of enclosing trip counts:
+
+* flops            — 2*prod(out)*prod(contracting) per dot/dot-general
+                     (elementwise excluded; <2% on these models),
+* memory bytes     — operand+result bytes of materialized (non-fusion-
+                     internal) ops: a model of HBM traffic in which loop-
+                     resident weights are re-read every iteration, as on
+                     a TPU whose weights do not fit VMEM,
+* collective bytes — operand bytes per collective kind.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_SHAPE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_CALLED = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_TRIP = re.compile(r'known_trip_count..:..n.:.(\d+)')
+_CONST_INT = re.compile(r"=\s*s(?:32|64)\[\]\s*constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_COLLECTIVE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\b")
+
+_SKIP_MEM = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "bitcast-convert", "after-all", "iota", "copy",
+             "partition-id", "replica-id",
+             # control flow: costs live in the called computations
+             "while", "conditional", "call", "optimization-barrier"}
+
+
+def _result_info(rhs: str) -> Tuple[int, int]:
+    """(elements, bytes) of the result type(s) before the opcode."""
+    head = rhs.split("(", 1)[0] if not rhs.startswith("(") else \
+        rhs[:rhs.index(")") + 1]
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE.findall(head):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+def _operand_section(rhs: str) -> str:
+    """The '(...)' argument list right after the opcode."""
+    m = re.search(r"\b[a-z][\w\-]*\(", rhs)
+    if not m:
+        return ""
+    start = m.end() - 1
+    depth = 0
+    for i in range(start, len(rhs)):
+        if rhs[i] == "(":
+            depth += 1
+        elif rhs[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return rhs[start + 1:i]
+    return rhs[start + 1:]
+
+
+def _opcode(rhs: str) -> str:
+    m = re.search(r"\b([a-z][\w\-]*)\(", rhs)
+    return m.group(1) if m else "unknown"
+
+
+def analyze_hlo(hlo: str) -> dict:
+    # ------------------------------------------------------------------
+    # split into computations
+    # ------------------------------------------------------------------
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None and "=" in line:
+            comps[cur].append(line)
+
+    flops = defaultdict(int)
+    mem = defaultdict(int)
+    coll = defaultdict(lambda: defaultdict(int))
+    edges: Dict[str, List[Tuple[float, str]]] = defaultdict(list)
+    fusion_comps = set()
+    cond_limit: Dict[str, int] = {}
+
+    # pre-pass: mark fusion-internal computations; find condition constants
+    for cname, lines in comps.items():
+        best = 0
+        for line in lines:
+            m = _OP.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            if _opcode(rhs) == "fusion":
+                for called in _CALLED.findall(rhs):
+                    fusion_comps.add(called)
+            cm = _CONST_INT.search(line)
+            if cm:
+                best = max(best, int(cm.group(1)))
+        cond_limit[cname] = best
+
+    # main pass
+    for cname, lines in comps.items():
+        defs: Dict[str, Tuple[int, int]] = {}          # name -> (elems, B)
+        for line in lines:
+            m = _OP.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            op = _opcode(rhs)
+            res_elems, res_bytes = _result_info(rhs)
+            defs[name] = (res_elems, res_bytes)
+            opsec = _operand_section(rhs)
+            operand_names = _OPERANDS.findall(opsec)
+
+            if op in ("dot", "dot-general"):
+                cmatch = _CONTRACT.search(rhs)
+                k = 1
+                if cmatch and operand_names:
+                    lhs = operand_names[0]
+                    # contracting dim sizes need the lhs dims; re-find them
+                    # from its defining line (store dims too)
+                    k = _contract_k(lines, lhs, cmatch.group(1))
+                flops[cname] += 2 * res_elems * max(k, 1)
+
+            cm = _COLLECTIVE.search(rhs)
+            if cm and cm.group(2) != "-done":
+                n = sum(defs.get(o, (0, 0))[1] for o in operand_names)
+                if n == 0:
+                    n = res_bytes
+                coll[cname][cm.group(1)] += n
+
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", rhs)
+                cnd = re.search(r"condition=%?([\w.\-]+)", rhs)
+                tm = _TRIP.search(rhs)
+                if bm and cnd:
+                    t = int(tm.group(1)) if tm else max(
+                        cond_limit.get(cnd.group(1), 0),
+                        cond_limit.get(bm.group(1), 0), 1)
+                    edges[cname].append((float(t), bm.group(1)))
+                    edges[cname].append((float(t), cnd.group(1)))
+            else:
+                for called in _CALLED.findall(rhs):
+                    edges[cname].append((1.0, called))
+
+            if op not in _SKIP_MEM and cname not in fusion_comps:
+                if op in ("dynamic-slice", "slice", "gather"):
+                    # reads only the sliced region (~= result)
+                    mem[cname] += 2 * res_bytes
+                elif op == "dynamic-update-slice":
+                    # in-place on TPU: read+write of the update region
+                    upd = defs.get(operand_names[1], (0, 0))[1] \
+                        if len(operand_names) > 1 else res_bytes
+                    mem[cname] += 2 * upd
+                else:
+                    obytes = sum(defs.get(o, (0, 0))[1]
+                                 for o in operand_names)
+                    mem[cname] += res_bytes + obytes
+
+    # ------------------------------------------------------------------
+    # multiplier propagation (call DAG fixed point)
+    # ------------------------------------------------------------------
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    for _ in range(256):
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for src, outs in edges.items():
+            if mult[src] == 0:
+                continue
+            for factor, dst in outs:
+                new[dst] += mult[src] * factor
+        if all(abs(new[k] - mult[k]) < 1e-6 for k in set(new) | set(mult)):
+            mult = new
+            break
+        mult = new
+
+    total_coll: Dict[str, float] = defaultdict(float)
+    for c, kinds in coll.items():
+        for kind, b in kinds.items():
+            total_coll[kind] += b * mult[c]
+    return {
+        "flops": float(sum(flops[c] * mult[c] for c in flops)),
+        "memory_bytes": float(sum(mem[c] * mult[c] for c in mem)),
+        "collective_bytes": {k: float(v) for k, v in total_coll.items()},
+        "n_computations": len(comps),
+    }
+
+
+_DIMS_CACHE: Dict[int, Dict[str, List[int]]] = {}
+
+
+def _contract_k(lines: List[str], lhs_name: str, contract_idx: str) -> int:
+    """Product of the lhs operand's contracting dim sizes."""
+    key = id(lines)
+    if key not in _DIMS_CACHE:
+        dims_map: Dict[str, List[int]] = {}
+        for line in lines:
+            m = _OP.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            head = rhs.split("(", 1)[0] if not rhs.startswith("(") else rhs
+            sm = _SHAPE.search(head)
+            if sm:
+                dims_map[m.group(1)] = [int(d) for d in
+                                        sm.group(2).split(",") if d]
+        _DIMS_CACHE.clear()          # keep the cache tiny
+        _DIMS_CACHE[key] = dims_map
+    dims = _DIMS_CACHE[key].get(lhs_name)
+    if not dims:
+        return 1
+    idx = [int(i) for i in contract_idx.split(",") if i]
+    try:
+        return math.prod(dims[i] for i in idx) if idx else 1
+    except IndexError:
+        return 1

@@ -1,0 +1,174 @@
+"""Hillclimb driver: lower one cell, print corrected roofline terms and the
+top collective contributors (shape x count x trip multiplier).
+
+  PYTHONPATH=src:. python -m benchmarks.perf_cell --arch llama3.2-3b \
+      --shape train_4k [--grad-mode repro_zero2] [--tag iterN]
+
+Appends a record to results/perf_log.json so the hypothesis->change->
+measure->validate loop in EXPERIMENTS.md §Perf has a machine-readable
+trail.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import re              # noqa: E402
+import time            # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+from benchmarks import hlo_cost      # noqa: E402
+from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS  # noqa: E402
+
+
+def collective_breakdown(txt: str, top: int = 12):
+    """(kind, shape) -> corrected bytes, using hlo_cost's multipliers."""
+    # reuse analyze_hlo internals by re-parsing with a shape-keyed variant
+    comps = {}
+    cur = None
+    for line in txt.splitlines():
+        m = hlo_cost._COMP_HDR.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None and "=" in line:
+            comps[cur].append(line)
+
+    res = hlo_cost.analyze_hlo(txt)
+    # recompute multipliers the same way (cheap second pass)
+    mult = _multipliers(comps, txt)
+    out = defaultdict(float)
+    for cname, lines in comps.items():
+        defs = {}
+        for line in lines:
+            m = hlo_cost._OP.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            _, rb = hlo_cost._result_info(rhs)
+            defs[name] = rb
+            cm = hlo_cost._COLLECTIVE.search(rhs)
+            if cm and cm.group(2) != "-done":
+                opsec = hlo_cost._operand_section(rhs)
+                ops = hlo_cost._OPERANDS.findall(opsec)
+                n = sum(defs.get(o, 0) for o in ops) or rb
+                sm = hlo_cost._SHAPE.search(rhs)
+                shp = f"{sm.group(1)}[{sm.group(2)}]" if sm else "?"
+                out[(cm.group(1), shp)] += n * mult.get(cname, 0)
+    rows = sorted(out.items(), key=lambda kv: -kv[1])[:top]
+    return res, rows
+
+
+def _multipliers(comps, txt):
+    edges = defaultdict(list)
+    cond_limit = {}
+    entry = None
+    for line in txt.splitlines():
+        m = hlo_cost._COMP_HDR.match(line)
+        if m and m.group(1):
+            entry = m.group(2)
+    for cname, lines in comps.items():
+        best = 0
+        for line in lines:
+            cm = hlo_cost._CONST_INT.search(line)
+            if cm:
+                best = max(best, int(cm.group(1)))
+        cond_limit[cname] = best
+    for cname, lines in comps.items():
+        for line in lines:
+            m = hlo_cost._OP.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            op = hlo_cost._opcode(rhs)
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", rhs)
+                cnd = re.search(r"condition=%?([\w.\-]+)", rhs)
+                tm = hlo_cost._TRIP.search(rhs)
+                if bm and cnd:
+                    t = int(tm.group(1)) if tm else max(
+                        cond_limit.get(cnd.group(1), 0),
+                        cond_limit.get(bm.group(1), 0), 1)
+                    edges[cname].append((float(t), bm.group(1)))
+                    edges[cname].append((float(t), cnd.group(1)))
+            else:
+                for called in hlo_cost._CALLED.findall(rhs):
+                    edges[cname].append((1.0, called))
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    for _ in range(256):
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for src, outs in edges.items():
+            if mult[src] == 0:
+                continue
+            for f, dst in outs:
+                new[dst] += mult[src] * f
+        if all(abs(new[k] - mult[k]) < 1e-6 for k in set(new) | set(mult)):
+            return new
+        mult = new
+    return mult
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--grad-mode", default="repro_zero2")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--tag", default="iter")
+    args = ap.parse_args()
+
+    from repro.launch import dryrun as dr
+    t0 = time.time()
+    # monkey-patch to also capture the HLO text
+    captured = {}
+    orig = hlo_cost.analyze_hlo
+
+    def wrap(txt):
+        captured["txt"] = txt
+        return orig(txt)
+
+    hlo_cost.analyze_hlo = wrap
+    rec = dr.lower_cell(args.arch, args.shape, args.multi_pod,
+                        grad_mode=args.grad_mode, remat=args.remat)
+    hlo_cost.analyze_hlo = orig
+    txt = captured.get("txt", "")
+    res, rows = collective_breakdown(txt)
+
+    c = rec["corrected"]
+    terms = {
+        "compute_s": c["flops"] / PEAK_FLOPS,
+        "memory_s": c["memory_bytes"] / HBM_BW,
+        "collective_s": sum(c["collective_bytes"].values()) / LINK_BW,
+    }
+    print(f"\n== {args.arch} x {args.shape} x "
+          f"{'2x16x16' if args.multi_pod else '16x16'} "
+          f"[{args.grad_mode}] tag={args.tag} ==")
+    print({k: round(v, 3) for k, v in terms.items()})
+    print("top collectives (corrected bytes):")
+    for (kind, shp), b in rows:
+        print(f"  {b/1e9:9.2f} GB  {kind:18} {shp}")
+
+    entry = {"tag": args.tag, "arch": args.arch, "shape": args.shape,
+             "grad_mode": args.grad_mode, "multi_pod": args.multi_pod,
+             "terms": terms, "corrected": c,
+             "memory": rec.get("memory"),
+             "top_collectives": [
+                 {"kind": k, "shape": s, "gbytes": b / 1e9}
+                 for (k, s), b in rows],
+             "wall_s": round(time.time() - t0, 1)}
+    path = "results/perf_log.json"
+    log = json.load(open(path)) if os.path.exists(path) else []
+    log.append(entry)
+    json.dump(log, open(path, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

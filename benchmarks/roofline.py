@@ -1,0 +1,150 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Hardware model (TPU v5e, per assignment):
+    peak bf16 compute : 197e12 FLOP/s per chip
+    HBM bandwidth     : 819e9  B/s   per chip
+    ICI link bandwidth: 50e9   B/s   per link
+
+Terms per (arch x shape x mesh) cell, from the dry-run JSON:
+    compute_term    = HLO_FLOPs / (chips * peak)
+    memory_term     = HLO_bytes / (chips * hbm_bw)
+    collective_term = collective_bytes / (chips * link_bw)
+
+cost_analysis() on the SPMD-partitioned module reports *per-device* FLOPs /
+bytes (the module is the per-device program), so chips-normalization uses
+n_devices=1 for those; collective bytes parsed from the HLO are also
+per-device module totals.  MODEL_FLOPS uses the 6*N*D rule (N = params,
+D = tokens; decode: D = new tokens only).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+# parameter counts (total / active) computed from the configs
+_PARAM_CACHE = {}
+
+
+def param_counts(arch: str):
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    import jax
+    from repro import configs as registry
+    from repro.models import lm
+    cfg = registry.get_config(arch)
+    shapes = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    total = sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+    active = total
+    if cfg.moe is not None:
+        # non-shared expert params count toward active at top_k/E
+        import jax.tree_util as jtu
+        expert = sum(
+            math.prod(leaf.shape)
+            for path, leaf in jtu.tree_flatten_with_path(shapes)[0]
+            if any(getattr(p, "key", "") == "moe" for p in path)
+            and any(getattr(p, "key", "") in ("w_gate", "w_up", "w_down")
+                    for p in path))
+        active = total - expert + expert * cfg.moe.top_k // cfg.moe.num_experts
+    _PARAM_CACHE[arch] = (total, active)
+    return total, active
+
+
+def tokens_processed(rec) -> int:
+    from repro.models.config import SHAPES
+    s = SHAPES[rec["shape"]]
+    if s.kind == "decode":
+        return s.global_batch                   # one new token per sequence
+    return s.global_batch * s.seq_len
+
+
+def analyze(rec: dict) -> dict:
+    if "skipped" in rec or "error" in rec:
+        return rec
+    n = rec["n_devices"]
+    corr = rec.get("corrected") or {}
+    if corr and "flops" in corr:
+        # trip-count-corrected HLO costs (see benchmarks/hlo_cost.py);
+        # cost_analysis() counts while bodies once and badly undercounts
+        # scanned programs — the raw values are kept alongside.
+        flops = corr["flops"]
+        bytes_ = corr["memory_bytes"]
+        coll = sum(corr["collective_bytes"].values())
+    else:
+        flops = rec["flops_total"]              # per-device program
+        bytes_ = rec["bytes_total"]
+        coll = sum(rec["collective_bytes"].values())
+    compute_t = flops / PEAK_FLOPS
+    memory_t = bytes_ / HBM_BW
+    collective_t = coll / LINK_BW
+    terms = {"compute": compute_t, "memory": memory_t,
+             "collective": collective_t}
+    bottleneck = max(terms, key=terms.get)
+    total, active = param_counts(rec["arch"])
+    toks = tokens_processed(rec)
+    is_train = rec["shape"].startswith("train")
+    mult = 6 if is_train else 2
+    model_flops = mult * active * toks / n      # per-device useful FLOPs
+    out = dict(rec)
+    out.update({
+        "compute_term_s": compute_t,
+        "memory_term_s": memory_t,
+        "collective_term_s": collective_t,
+        "bottleneck": bottleneck,
+        "model_flops_per_dev": model_flops,
+        "useful_flop_ratio": model_flops / flops if flops > 0 else None,
+        "roofline_fraction": (
+            model_flops / PEAK_FLOPS) / max(compute_t, memory_t,
+                                            collective_t)
+        if flops > 0 else None,
+        "params_total": total,
+        "params_active": active,
+    })
+    return out
+
+
+def render_table(records, fh=sys.stdout):
+    cols = ["arch", "shape", "mesh", "bottleneck"]
+    print(f"{'arch':24} {'shape':12} {'mesh':8} {'compute_s':>10} "
+          f"{'memory_s':>10} {'collect_s':>10} {'bneck':>8} {'useful':>7} "
+          f"{'roofline':>9}", file=fh)
+    for r in records:
+        if "skipped" in r:
+            print(f"{r['arch']:24} {r['shape']:12} {'-':8} "
+                  f"{'skipped: sub-quadratic only':>40}", file=fh)
+            continue
+        if "error" in r:
+            print(f"{r['arch']:24} {r['shape']:12} {'-':8} ERROR", file=fh)
+            continue
+        print(f"{r['arch']:24} {r['shape']:12} {r['mesh']:8} "
+              f"{r['compute_term_s']:10.4f} {r['memory_term_s']:10.4f} "
+              f"{r['collective_term_s']:10.4f} {r['bottleneck']:>8} "
+              f"{(r['useful_flop_ratio'] or 0):7.3f} "
+              f"{(r['roofline_fraction'] or 0):9.3f}", file=fh)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("inputs", nargs="+", help="dry-run JSON files")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    records = []
+    for path in args.inputs:
+        with open(path) as f:
+            records.extend(json.load(f))
+    analyzed = [analyze(r) for r in records]
+    render_table(analyzed)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(analyzed, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

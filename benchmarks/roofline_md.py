@@ -1,0 +1,28 @@
+"""Render the single-pod roofline table as markdown for EXPERIMENTS.md."""
+import json
+import sys
+
+
+def main(path):
+    recs = json.load(open(path))
+    print("| arch | shape | compute_s | memory_s | collective_s | "
+          "bottleneck | useful | roofline |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("mesh") not in (None, "16x16"):
+            continue
+        if "skipped" in r:
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                  f"N/A (sub-quadratic only) | — | — |")
+            continue
+        if "error" in r:
+            print(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_term_s']:.3f} | "
+              f"{r['memory_term_s']:.2f} | {r['collective_term_s']:.2f} | "
+              f"{r['bottleneck']} | {(r['useful_flop_ratio'] or 0):.3f} | "
+              f"{(r['roofline_fraction'] or 0):.4f} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1])

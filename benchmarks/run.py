@@ -1,0 +1,47 @@
+"""Benchmark orchestrator — one suite per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME ...]
+
+Default (quick) mode keeps sizes CPU-friendly; --full uses paper-scale
+inputs.  The roofline table is produced separately from the dry-run JSONs
+(benchmarks/roofline.py) because it needs the 512-device compile artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+
+# x64 so the double-precision Table II rows are faithful
+jax.config.update("jax_enable_x64", True)
+
+SUITES = ["accuracy", "rsum", "datatype", "groupby", "buffer", "partition",
+          "end2end"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale inputs (slow on CPU)")
+    ap.add_argument("--only", nargs="*", default=None, choices=SUITES)
+    args = ap.parse_args(argv)
+    quick = not args.full
+    suites = args.only or SUITES
+
+    print(f"repro benchmarks — {'full' if args.full else 'quick'} mode, "
+          f"backend={jax.default_backend()}, devices={jax.device_count()}")
+    t0 = time.time()
+    for name in suites:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t = time.time()
+        mod.run(quick=quick)
+        print(f"-- {name} done in {time.time() - t:.1f}s")
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s; "
+          "results in benchmarks/results/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

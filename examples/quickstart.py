@@ -1,0 +1,61 @@
+"""Quickstart: the paper's problem and its fix, in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. demonstrates floating-point non-reproducibility (Algorithm 1 of the
+   paper: the same GROUPBY over permuted rows gives different bits),
+2. fixes it with the reproducible accumulator / segment_rsum,
+3. shows the HAVING-clause instability the paper warns about.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ReproSpec, finalize, from_values, segment_rsum
+
+rng = np.random.default_rng(0)
+
+# --- 1. non-reproducible SUM (paper Algorithm 1) -------------------------
+values = (rng.standard_normal(100_000) * np.exp(
+    rng.standard_normal(100_000) * 6)).astype(np.float32)
+perm = rng.permutation(len(values))
+
+plain_a = float(jnp.sum(jnp.asarray(values)))
+plain_b = float(jnp.sum(jnp.asarray(values[perm])))
+print("conventional float sum:")
+print(f"  storage order A: {plain_a!r}")
+print(f"  storage order B: {plain_b!r}")
+print(f"  bit-identical?   {np.float32(plain_a).tobytes() == np.float32(plain_b).tobytes()}")
+
+# --- 2. reproducible SUM --------------------------------------------------
+spec = ReproSpec(dtype=jnp.float32, L=2)
+rep_a = float(finalize(from_values(values, spec), spec))
+rep_b = float(finalize(from_values(values[perm], spec), spec))
+print("\nreproducible sum (repro<f32, L=2>):")
+print(f"  storage order A: {rep_a!r}")
+print(f"  storage order B: {rep_b!r}")
+print(f"  bit-identical?   {np.float32(rep_a).tobytes() == np.float32(rep_b).tobytes()}")
+assert np.float32(rep_a).tobytes() == np.float32(rep_b).tobytes()
+
+# --- 3. GROUPBY with a HAVING clause --------------------------------------
+n_groups = 8
+ids = rng.integers(0, n_groups, len(values)).astype(np.int32)
+
+h_a = np.asarray(jnp.asarray(
+    jnp.zeros(n_groups).at[ids].add(values))) >= 1.0
+h_b = np.asarray(jnp.asarray(
+    jnp.zeros(n_groups).at[ids[perm]].add(values[perm]))) >= 1.0
+
+acc_a = segment_rsum(values, ids, n_groups, spec)
+acc_b = segment_rsum(values[perm], ids[perm], n_groups, spec)
+r_a = np.asarray(finalize(acc_a, spec)) >= 1.0
+r_b = np.asarray(finalize(acc_b, spec)) >= 1.0
+
+print("\nHAVING SUM(f) >= 1 (which groups survive):")
+print(f"  float,  order A: {h_a.astype(int)}")
+print(f"  float,  order B: {h_b.astype(int)}  "
+      f"(stable: {np.array_equal(h_a, h_b)})")
+print(f"  repro,  order A: {r_a.astype(int)}")
+print(f"  repro,  order B: {r_b.astype(int)}  "
+      f"(stable: {np.array_equal(r_a, r_b)})")
+assert np.array_equal(r_a, r_b)
+print("\nOK: repro aggregation is bit-stable under physical reordering.")

@@ -1,0 +1,21 @@
+"""Serving example: prefill + batched greedy decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch smollm-135m]
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    serve.main(["--arch", args.arch, "--reduced",
+                "--batch", str(args.batch), "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

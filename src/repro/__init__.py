@@ -1,0 +1,7 @@
+"""repro: bit-reproducible floating-point aggregation for JAX training and
+inference at multi-pod scale (Mueller et al., ICDE'18, adapted to TPU)."""
+from repro.core import (  # noqa: F401
+    ReproSpec, ReproAcc, from_values, finalize, merge, segment_rsum,
+    repro_psum,
+)
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+"""Core reproducible-aggregation library (the paper's contribution in JAX)."""
+from repro.core.types import ReproSpec, FloatSpec, float_spec  # noqa: F401
+from repro.core.accumulator import (  # noqa: F401
+    ReproAcc, zeros, from_values, add_values, merge, finalize, extract,
+    renorm, demote_to, to_paper_state, from_paper_state, required_e1,
+)
+from repro.core.segment import segment_rsum  # noqa: F401
+from repro.core.collectives import repro_psum, repro_psum_packed  # noqa: F401
+from repro.core import rsum, buffers  # noqa: F401

@@ -1,0 +1,238 @@
+"""The associative reproducible accumulator (paper §III/§IV, TPU-adapted).
+
+Canonical representation (DESIGN.md §3.2): a level sum S^(l) of the paper is
+stored as ``A(e_l) + k_l * ulp(e_l)`` with
+
+* ``k``  — int window offsets, invariant ``0 <= k < 2^(m-2)`` (canonical
+           euclidean decomposition, restored by :func:`renorm` after every
+           reduction so ``finalize`` is a pure function of the value),
+* ``C``  — int carry counters in units of ``0.25 * ufp = 2^(m-2) ulp``,
+* ``e1`` — the level-1 extractor exponent, always on the lattice ``W * Z``
+           so any two accumulators have alignable level sets.
+
+All arithmetic between extraction and finalization is *integer* arithmetic,
+hence exact, associative and commutative: any reduction tree over any device
+mesh produces bit-identical results.  This is the paper's ``repro<ScalarT,L>``
+with the float running sums replaced by their exact integer coordinates
+(interconversion is exact; see :func:`to_paper_state` / :func:`from_paper_state`).
+
+Extraction uses *fixed* lattice extractors ``A = 1.5 * 2^(e_l)``.  Because A's
+low mantissa bits are zero and ``A/ulp(A)`` is even, ``q = rd(A + b) - A`` is a
+pure function of ``b`` (round-half-to-even cannot depend on accumulated state),
+which removes the tie-breaking order dependence that a running-sum extractor
+could exhibit (noted in DESIGN.md §9).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eft
+from repro.core.types import ReproSpec
+
+__all__ = [
+    "ReproAcc", "zeros", "extract", "renorm", "from_values", "add_values",
+    "merge", "finalize", "demote_to", "to_paper_state", "from_paper_state",
+    "required_e1",
+]
+
+
+class ReproAcc(NamedTuple):
+    """Pytree accumulator; leading dims are batch dims, last dim is L."""
+
+    k: jax.Array    # int (..., L) window offsets, canonical in [0, 2^(m-2))
+    C: jax.Array    # int (..., L) carry counts (units of 2^(m-2) ulp)
+    e1: jax.Array   # int32 (...)  lattice exponent of level 1
+
+    @property
+    def batch_shape(self):
+        return self.k.shape[:-1]
+
+
+def zeros(spec: ReproSpec, shape=()) -> ReproAcc:
+    """An empty accumulator at the bottom of the lattice (identity of merge)."""
+    idt = spec.int_dtype
+    return ReproAcc(
+        k=jnp.zeros((*shape, spec.L), idt),
+        C=jnp.zeros((*shape, spec.L), idt),
+        e1=jnp.full(shape, spec.lattice_lo, jnp.int32),
+    )
+
+
+def required_e1(values, spec: ReproSpec, axis=None, keepdims=False):
+    """Lattice e1 admitting every value: from the exponent of max |b|."""
+    amax = jnp.max(jnp.abs(values), axis=axis, keepdims=keepdims)
+    # exponent() of 0 is min_exp - 1 (all-zero exp field), harmless under clamp
+    e = eft.exponent(amax.astype(spec.dtype))
+    return spec.clamp_e1(spec.lattice_e1(e)).astype(jnp.int32)
+
+
+def extract(values, e1, spec: ReproSpec):
+    """Per-element contributions as exact ints: k int[..., L].
+
+    ``values`` float (...), ``e1`` int32 broadcastable to values.shape.
+    Precondition (guaranteed by :func:`required_e1`): |b| < 2^(e1 - m + W - 1).
+    """
+    values = values.astype(spec.dtype)
+    e1 = jnp.asarray(e1, jnp.int32)
+    r = values
+    ks = []
+    for l in range(spec.L):
+        e_l = e1 - l * spec.W
+        A = eft.extractor(e_l, spec.dtype)
+        q, r = eft.eft_fixed(A, r)
+        k = (q * eft.pow2(spec.m - e_l, spec.dtype)).astype(spec.int_dtype)
+        ks.append(k)
+    return jnp.stack(ks, axis=-1)
+
+
+def renorm(k, C, spec: ReproSpec):
+    """Restore the canonical window invariant k in [0, 2^(m-2)).
+
+    Arithmetic shift gives floor division, so the decomposition is euclidean
+    and unique — finalize becomes a pure function of the accumulated value.
+    """
+    shift = spec.m - 2
+    d = k >> shift
+    return k - (d << shift), C + d
+
+
+def _tree_sum(k, C, spec: ReproSpec, axis: int):
+    """Exact, order-independent reduction of (k, C) partials along ``axis``.
+
+    Sums in groups of ``spec.tree_group`` with a renormalization between
+    rounds so window offsets never overflow the integer dtype.  Integer
+    addition is associative, so any regrouping yields identical bits.
+    """
+    g = spec.tree_group
+    k = jnp.moveaxis(k, axis, 0)
+    C = jnp.moveaxis(C, axis, 0)
+    while k.shape[0] > 1:
+        n = k.shape[0]
+        pad = (-n) % g
+        if pad:
+            k = jnp.concatenate([k, jnp.zeros((pad, *k.shape[1:]), k.dtype)], 0)
+            C = jnp.concatenate([C, jnp.zeros((pad, *C.shape[1:]), C.dtype)], 0)
+        k = k.reshape(-1, g, *k.shape[1:]).sum(axis=1)   # exact: g * 2^(m-2) fits
+        C = C.reshape(-1, g, *C.shape[1:]).sum(axis=1)
+        k, C = renorm(k, C, spec)
+    # single-element inputs skip the loop: renorm unconditionally so the
+    # canonical window invariant holds for every return path
+    return renorm(k[0], C[0], spec)
+
+
+def from_values(values, spec: ReproSpec, axis=None, e1=None) -> ReproAcc:
+    """Reproducible sum of ``values`` over ``axis`` (default: all axes).
+
+    Two logical passes, as in Demmel–Nguyen: (1) max -> lattice e1,
+    (2) extract + exact integer reduction.  The result is independent of
+    any ordering or regrouping of ``values`` along the reduced axes.
+    """
+    values = jnp.asarray(values, spec.dtype)
+    if axis is None:
+        values = values.reshape(-1)
+        axis = 0
+    axis = axis % values.ndim
+    batch_shape = values.shape[:axis] + values.shape[axis + 1:]
+    if e1 is None:
+        e1_b = required_e1(values, spec, axis=axis)     # (batch,)
+    else:
+        e1_b = jnp.broadcast_to(jnp.asarray(e1, jnp.int32), batch_shape)
+    k = extract(values, jnp.expand_dims(e1_b, axis), spec)  # (..., L)
+    k, C = _tree_sum(k, jnp.zeros_like(k), spec, axis=axis)
+    return ReproAcc(k=k, C=C, e1=e1_b)
+
+
+def demote_to(acc: ReproAcc, e1_new, spec: ReproSpec) -> ReproAcc:
+    """Shift an accumulator onto a coarser lattice point (paper Alg.2 l.5-7).
+
+    New top levels are exactly zero (every admitted value rounds to zero
+    against a coarser extractor: |b| < 0.5 ulp strictly); the bottom
+    ``s = (e1_new - e1)/W`` levels are discarded — identical semantics to the
+    paper's demotion, and the discard is order-independent (DESIGN.md §3.2).
+    """
+    e1_new = jnp.asarray(e1_new, jnp.int32)
+    if acc.e1.ndim == 0 and e1_new.ndim == 0:
+        # per-tensor lattice (gradient accumulators): static shift branches
+        s = jnp.clip((e1_new - acc.e1) // spec.W, 0, spec.L)
+
+        def shift(i):
+            def f(operands):
+                k, C = operands
+                if i == 0:
+                    return k, C
+                zk = jnp.zeros_like(k[..., :i])
+                return (jnp.concatenate([zk, k[..., :spec.L - i]], -1),
+                        jnp.concatenate([zk, C[..., :spec.L - i]], -1))
+            return f
+
+        k, C = jax.lax.switch(s, [shift(i) for i in range(spec.L + 1)],
+                              (acc.k, acc.C))
+        return ReproAcc(k=k, C=C, e1=e1_new)
+    s = (e1_new - acc.e1) // spec.W                      # (...) >= 0
+    idx = jnp.arange(spec.L, dtype=jnp.int32) - s[..., None]
+    valid = idx >= 0
+    idx = jnp.clip(idx, 0, spec.L - 1)
+    k = jnp.where(valid, jnp.take_along_axis(acc.k, idx, axis=-1), 0)
+    C = jnp.where(valid, jnp.take_along_axis(acc.C, idx, axis=-1), 0)
+    return ReproAcc(k=k, C=C, e1=e1_new)
+
+
+def merge(a: ReproAcc, b: ReproAcc, spec: ReproSpec) -> ReproAcc:
+    """Exact associative merge (the paper's operator+=(repro) analogue)."""
+    e1 = jnp.maximum(a.e1, b.e1)
+    a = demote_to(a, e1, spec)
+    b = demote_to(b, e1, spec)
+    k, C = renorm(a.k + b.k, a.C + b.C, spec)
+    return ReproAcc(k=k, C=C, e1=e1)
+
+
+def add_values(acc: ReproAcc, values, spec: ReproSpec, axis=None) -> ReproAcc:
+    """Streaming add of a batch of values (paper's operator+=(ScalarT)).
+
+    Demotes the accumulator first if the batch max exceeds the admission
+    threshold of its current lattice — the vectorized analogue of Alg.3
+    line 4 (one max check per batch instead of per element).
+    """
+    return merge(acc, from_values(values, spec, axis=axis), spec)
+
+
+def finalize(acc: ReproAcc, spec: ReproSpec):
+    """Deterministic conversion to a float (paper Eq. 1).
+
+    Summed from the last (finest) level up, in the accumulator's dtype.
+    Only this step rounds; it is a pure function of the canonical (k, C, e1),
+    so reproducibility of the accumulator carries over to the float result.
+    """
+    dt = spec.dtype
+    es = acc.e1[..., None] - jnp.arange(spec.L, dtype=jnp.int32) * spec.W
+    # Q_l = C * 2^(e_l - 2) + k * 2^(e_l - m); both products exact for
+    # C < 2^(m+1) (always true in practice; rounding would still be
+    # deterministic as (k, C) are canonical).
+    q = (acc.C.astype(dt) * eft.pow2(es - 2, dt)
+         + acc.k.astype(dt) * eft.pow2(es - spec.m, dt))
+    total = jnp.zeros(acc.batch_shape, dt)
+    for l in range(spec.L - 1, -1, -1):
+        total = total + q[..., l]
+    return total
+
+
+def to_paper_state(acc: ReproAcc, spec: ReproSpec):
+    """Exact conversion to the paper's <S[L], C[L]> float representation."""
+    es = acc.e1[..., None] - jnp.arange(spec.L, dtype=jnp.int32) * spec.W
+    A = eft.extractor(es, spec.dtype)
+    S = A + acc.k.astype(spec.dtype) * eft.pow2(es - spec.m, spec.dtype)
+    return S, acc.C
+
+
+def from_paper_state(S, C, e1, spec: ReproSpec) -> ReproAcc:
+    """Exact inverse of :func:`to_paper_state` (S must lie in its window)."""
+    e1 = jnp.asarray(e1, jnp.int32)
+    es = e1[..., None] - jnp.arange(spec.L, dtype=jnp.int32) * spec.W
+    A = eft.extractor(es, spec.dtype)
+    k = ((S - A) * eft.pow2(spec.m - es, spec.dtype)).astype(spec.int_dtype)
+    k, C = renorm(k, jnp.asarray(C, spec.int_dtype), spec)
+    return ReproAcc(k=k, C=C, e1=e1)

@@ -1,0 +1,103 @@
+"""Summation buffers (paper §V-A), faithfully.
+
+A summation buffer is a per-group array of pending input values plus a
+``next`` offset; values are appended until the buffer fills, at which point
+the whole buffer is flushed through the vectorized summation routine into the
+group's ``repro`` accumulator.
+
+The scan-based :func:`append` reproduces the paper's per-tuple control flow
+exactly (lookup -> append -> flush-on-full) and is used by the fidelity tests
+and the Fig. 8 microbenchmark at small n.  The *throughput* path in this
+framework is the blocked/one-hot aggregation in :mod:`repro.core.segment`,
+where the renormalization chunk plays the buffer-size role (bsz == chunk) —
+see DESIGN.md §3.3 for why software-managed buffers are replaced by VMEM
+tiles on TPU.
+
+The buffer-size model (paper Eq. 4) is :func:`optimal_bsz` with |cache| ==
+VMEM per core on TPU and LLC per core on CPU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import accumulator as acc_mod
+from repro.core.accumulator import ReproAcc
+from repro.core.types import ReproSpec
+
+__all__ = ["BufferState", "init", "append", "flush_all", "optimal_bsz"]
+
+VMEM_BYTES_PER_CORE = 16 * 2 ** 20      # TPU v5e VMEM
+LLC_BYTES_PER_CORE = 1 * 2 ** 20        # paper §VI-D: ~1 MiB effective / core
+
+
+def optimal_bsz(n_groups: int, fanout: int, itemsize: int,
+                cache_bytes: int = LLC_BYTES_PER_CORE,
+                bsz_max: int = 4096) -> int:
+    """Paper Eq. 4: bsz = min(|cache| / (n_groups/F * sizeof), bsz_max)."""
+    per_partition = max(1, n_groups // max(1, fanout))
+    bsz = cache_bytes // (per_partition * itemsize)
+    return int(max(1, min(bsz, bsz_max)))
+
+
+class BufferState(NamedTuple):
+    buf: jax.Array     # (G, bsz) pending values
+    nxt: jax.Array     # (G,) int32 next free slot
+    acc: ReproAcc      # (G,) group accumulators
+
+
+def init(num_groups: int, bsz: int, spec: ReproSpec) -> BufferState:
+    return BufferState(
+        buf=jnp.zeros((num_groups, bsz), spec.dtype),
+        nxt=jnp.zeros((num_groups,), jnp.int32),
+        acc=acc_mod.zeros(spec, (num_groups,)),
+    )
+
+
+def _flush_row(acc: ReproAcc, row, gid, spec: ReproSpec) -> ReproAcc:
+    """acc[gid] += rsum(row) — one buffer flush through the summation routine."""
+    part = acc_mod.from_values(row, spec)
+    gacc = ReproAcc(k=acc.k[gid], C=acc.C[gid], e1=acc.e1[gid])
+    merged = acc_mod.merge(gacc, part, spec)
+    return ReproAcc(k=acc.k.at[gid].set(merged.k),
+                    C=acc.C.at[gid].set(merged.C),
+                    e1=acc.e1.at[gid].set(merged.e1))
+
+
+def append(state: BufferState, segment_ids, values, spec: ReproSpec
+           ) -> BufferState:
+    """Process <key, value> pairs one tuple at a time (paper §V-A verbatim)."""
+    bsz = state.buf.shape[1]
+
+    def step(st: BufferState, kv):
+        gid, v = kv
+        pos = st.nxt[gid]
+        buf = st.buf.at[gid, pos].set(v)
+        nxt = st.nxt.at[gid].add(jnp.int32(1))
+
+        def do_flush(operands):
+            buf, nxt, acc = operands
+            row = lax.dynamic_index_in_dim(buf, gid, 0, keepdims=False)
+            acc = _flush_row(acc, row, gid, spec)
+            return buf, nxt.at[gid].set(0), acc
+
+        buf, nxt, acc = lax.cond(nxt[gid] == bsz, do_flush, lambda o: o,
+                                 (buf, nxt, st.acc))
+        return BufferState(buf, nxt, acc), None
+
+    out, _ = lax.scan(step, state, (jnp.asarray(segment_ids, jnp.int32),
+                                    jnp.asarray(values, spec.dtype)))
+    return out
+
+
+def flush_all(state: BufferState, spec: ReproSpec) -> ReproAcc:
+    """Flush every partially-filled buffer (end of input) and return the
+    per-group accumulators (vectorized over groups)."""
+    bsz = state.buf.shape[1]
+    mask = jnp.arange(bsz) < state.nxt[:, None]
+    vals = jnp.where(mask, state.buf, 0)
+    tail = acc_mod.from_values(vals, spec, axis=1)
+    return acc_mod.merge(state.acc, tail, spec)

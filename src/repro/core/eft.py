@@ -1,0 +1,102 @@
+"""Error-free transformation primitives (paper §III-A/B).
+
+Everything here is branch-free bit manipulation + IEEE float ops.  XLA does
+not reassociate floating-point arithmetic, so ``(r + S) - S`` survives jit
+exactly as written; these identities are the foundation of reproducibility.
+
+Functions are dtype-generic over float32/float64 (float64 requires
+``jax.config.update("jax_enable_x64", True)``; the TPU production path is
+float32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import float_spec
+
+__all__ = [
+    "ufp", "ulp", "exponent", "pow2", "extractor", "eft", "eft_fixed",
+    "scale_to_int", "int_to_scaled",
+]
+
+
+def _bits(x):
+    spec = float_spec(x.dtype)
+    return jax.lax.bitcast_convert_type(x, spec.int_dtype)
+
+
+def _from_bits(b, dtype):
+    return jax.lax.bitcast_convert_type(b, dtype)
+
+
+def exponent(x):
+    """Unbiased exponent of |x| (== floor(log2 |x|) for normals) as int32."""
+    spec = float_spec(x.dtype)
+    e = (_bits(x) & spec.exp_mask) >> spec.m
+    return e.astype(jnp.int32) - spec.bias
+
+
+def ufp(x):
+    """Unit in the first place: 2^exponent(x) (Goldberg).  ufp(0) = 0."""
+    spec = float_spec(x.dtype)
+    return _from_bits(_bits(x) & spec.exp_mask, x.dtype)
+
+
+def ulp(x):
+    """Unit in the last place: 2^(exponent(x) - m)."""
+    spec = float_spec(x.dtype)
+    return pow2(exponent(x) - spec.m, x.dtype)
+
+
+def pow2(e, dtype):
+    """Exact 2^e for integer e within the normal range (no pow/exp calls)."""
+    spec = float_spec(dtype)
+    e = jnp.asarray(e, jnp.int32)
+    biased = (e + spec.bias).astype(spec.int_dtype) << spec.m
+    return _from_bits(biased, np.dtype(dtype))
+
+
+def extractor(e, dtype):
+    """The extractor value A = 1.5 * 2^e (mantissa = 1.1000...)."""
+    spec = float_spec(dtype)
+    e = jnp.asarray(e, jnp.int32)
+    biased = (e + spec.bias).astype(spec.int_dtype) << spec.m
+    return _from_bits(biased | spec.int_dtype(spec.half_bit), np.dtype(dtype))
+
+
+def eft(S, b):
+    """Error-free transformation against a running sum S (paper Fig. 1).
+
+    Returns (q, r) with q = (S + b) - S an integer multiple of ulp(S) and
+    r = b - q exact.  Precondition: |b| < 2^(W-1) * ulp(S) and S in its
+    window [1.5 ufp, 1.75 ufp) (maintained by carry propagation).
+    """
+    q = (S + b) - S
+    r = b - q
+    return q, r
+
+
+def eft_fixed(A, b):
+    """EFT against a *constant* extractor A = 1.5 * 2^e (fast path).
+
+    Identical arithmetic to :func:`eft`; separated for readability at call
+    sites where A never changes (lattice-extractor mode).
+    """
+    q = (A + b) - A
+    r = b - q
+    return q, r
+
+
+def scale_to_int(q, e, m):
+    """Exact integer k = q / 2^(e - m) for q a multiple of ulp = 2^(e-m).
+
+    |k| <= 2^(W-1) + 1 always fits int32 for W <= 30.
+    """
+    return (q * pow2(m - jnp.asarray(e, jnp.int32), q.dtype)).astype(jnp.int32)
+
+
+def int_to_scaled(k, e, m, dtype):
+    """Exact float k * 2^(e - m) for |k| < 2^(m+1) (single rounding else)."""
+    return k.astype(dtype) * pow2(jnp.asarray(e, jnp.int32) - m, dtype)

@@ -1,0 +1,226 @@
+"""Faithful reproductions of the paper's RSUM algorithms (§III).
+
+* :func:`rsum_scalar`     — Algorithm 2 verbatim: per-element extraction
+  against the L running sums, level demotion via a while-loop, carry
+  propagation after every element.
+* :func:`rsum_simd`       — Algorithm 3: V lane-parallel running sums,
+  demotion check once per V*NB block, carry propagation every NB rounds,
+  exact horizontal merge at the end (paper Eq. 2/3; we perform the
+  cross-lane sum in exact integer arithmetic — bit-identical semantics,
+  see DESIGN.md §3.3).
+* :func:`rsum_simd_chunked` — the Fig. 6 usage pattern: state is stored to
+  "memory" (the paper's summation-state format: one S and one C per level)
+  after every chunk of c values and re-expanded for the next chunk.
+
+These are the paper-faithful baseline.  The production fast path is
+:func:`repro.core.accumulator.from_values` (fixed lattice extractors +
+integer accumulation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import eft
+from repro.core.types import ReproSpec
+
+__all__ = [
+    "init_state", "choose_f", "rsum_scalar", "rsum_simd",
+    "rsum_simd_chunked", "finalize_state", "conventional_sum",
+]
+
+
+def choose_f(values, spec: ReproSpec):
+    """Paper §III-C: f > log2|b_1| + m - W + 1 (we use the batch max)."""
+    amax = jnp.max(jnp.abs(values))
+    return eft.exponent(amax.astype(spec.dtype)) + spec.m - spec.W + 2
+
+
+def init_state(f, spec: ReproSpec):
+    """S^(l) = 1.5 * 2^(f - (l-1) W), C^(l) = 0 (paper §III-C)."""
+    es = jnp.asarray(f, jnp.int32) - jnp.arange(spec.L, dtype=jnp.int32) * spec.W
+    S = eft.extractor(es, spec.dtype)
+    C = jnp.zeros(spec.L, jnp.int32)
+    return S, C
+
+
+def _carry_propagate(S, C, spec: ReproSpec):
+    """Alg. 2 lines 14-18: renormalize S into [1.5 ufp, 1.75 ufp)."""
+    u = eft.ufp(S)
+    d = jnp.floor((S - 1.5 * u) / (0.25 * u)).astype(jnp.int32)
+    S = S - d.astype(spec.dtype) * (0.25 * u)   # exact: multiples of ulp
+    return S, C + d
+
+
+def _demote_once(S, C, spec: ReproSpec, lane_axis: bool):
+    """Alg. 2 lines 5-7: shift levels down, new coarser first level."""
+    src = S[0, 0] if lane_axis else S[0]
+    top = eft.extractor(eft.exponent(src) + spec.W, spec.dtype)
+    S = jnp.roll(S, 1, axis=0)
+    C = jnp.roll(C, 1, axis=0)
+    if lane_axis:
+        S = S.at[0, :].set(top)
+        C = C.at[0, :].set(0)
+    else:
+        S = S.at[0].set(top)
+        C = C.at[0].set(0)
+    return S, C
+
+
+def _demote_while(S, C, amax, spec: ReproSpec, lane_axis: bool):
+    """While |b|max >= 2^(W-1) ulp(S^(1)): demote (Alg. 2 line 4)."""
+    def cond(sc):
+        S, _ = sc
+        s1 = S[0, 0] if lane_axis else S[0]
+        thresh = eft.pow2(eft.exponent(s1) + spec.W - 1 - spec.m, spec.dtype)
+        return amax >= thresh
+
+    def body(sc):
+        return _demote_once(*sc, spec=spec, lane_axis=lane_axis)
+
+    return lax.while_loop(cond, body, (S, C))
+
+
+def _extract_into(S, r, spec: ReproSpec):
+    """Alg. 2 lines 9-13 for one value (or one lane-vector of values)."""
+    for l in range(spec.L):
+        q = (r + S[l]) - S[l]
+        S = S.at[l].add(q)      # exact: q is a multiple of ulp(S^(l))
+        r = r - q               # exact remainder
+    return S
+
+
+def rsum_scalar(values, spec: ReproSpec, f=None):
+    """Paper Algorithm 2 (RSUM SCALAR).  Returns the paper state (S, C)."""
+    values = jnp.asarray(values, spec.dtype).reshape(-1)
+    if f is None:
+        f = choose_f(values, spec) - spec.W  # start low; demotion exercises Alg2 l.4
+    S0, C0 = init_state(f, spec)
+
+    def step(carry, b):
+        S, C = carry
+        S, C = _demote_while(S, C, jnp.abs(b), spec, lane_axis=False)
+        S = _extract_into(S, b, spec)
+        S, C = _carry_propagate(S, C, spec)
+        return (S, C), None
+
+    (S, C), _ = lax.scan(step, (S0, C0), values)
+    return S, C
+
+
+def _expand_lanes(S, C, V, spec: ReproSpec):
+    """Paper §III-D state load: lane 0 = memory state, others 1.5 ufp / 0."""
+    Sl = jnp.broadcast_to((1.5 * eft.ufp(S))[:, None], (spec.L, V)).astype(spec.dtype)
+    Sl = Sl.at[:, 0].set(S)
+    Cl = jnp.zeros((spec.L, V), jnp.int32).at[:, 0].set(C)
+    return Sl, Cl
+
+
+def _merge_lanes(S, C, spec: ReproSpec):
+    """Paper Eq. 2/3 horizontal merge, done in exact integer arithmetic.
+
+    All lanes share level exponents (demotion is applied lane-uniformly), so
+    S_v = A_l + k_v ulp; Eq. 2's sum of (S_v - 1.5 ufp) is sum(k_v) * ulp,
+    which we compute as an int32 reduction (V * 2^(m-2) << 2^31) and fold the
+    window overflow into C — bit-identical to an exact evaluation of Eq. 2.
+    """
+    e = eft.exponent(S[:, 0])                               # (L,)
+    A = eft.extractor(e, spec.dtype)
+    k = ((S - A[:, None]) * eft.pow2(spec.m - e, spec.dtype)[:, None])
+    k = k.astype(spec.int_dtype).sum(axis=1)                # exact
+    d = k >> (spec.m - 2)
+    k = k - (d << (spec.m - 2))
+    S_out = A + k.astype(spec.dtype) * eft.pow2(e - spec.m, spec.dtype)
+    C_out = (C.sum(axis=1) + d.astype(jnp.int32)).astype(jnp.int32)
+    return S_out, C_out
+
+
+def rsum_simd(values, spec: ReproSpec, V: int = 64, f=None):
+    """Paper Algorithm 3 (RSUM SIMD).  Returns the paper state (S, C)."""
+    values = jnp.asarray(values, spec.dtype).reshape(-1)
+    nb = spec.nb
+    n = values.shape[0]
+    pad = (-n) % (V * nb)
+    if pad:
+        values = jnp.concatenate([values, jnp.zeros(pad, spec.dtype)])
+    blocks = values.reshape(-1, nb, V)
+    if f is None:
+        f = choose_f(values, spec)
+    S0, C0 = _expand_lanes(*init_state(f, spec), V, spec)
+
+    def outer(carry, block):
+        S, C = carry
+        S, C = _demote_while(S, C, jnp.max(jnp.abs(block)), spec,
+                             lane_axis=True)
+
+        def inner(S, b_v):
+            return _extract_into(S, b_v, spec), None
+
+        S, _ = lax.scan(inner, S, block)                    # NB rounds of V
+        S, C = _carry_propagate(S, C, spec)
+        return (S, C), None
+
+    (S, C), _ = lax.scan(outer, (S0, C0), blocks)
+    return _merge_lanes(S, C, spec)
+
+
+def rsum_simd_chunked(values, spec: ReproSpec, c: int, V: int = 64):
+    """Fig. 6 pattern: call RSUM SIMD per chunk of c values, persisting the
+    scalar summation state between calls (load/expand + merge/store)."""
+    values = jnp.asarray(values, spec.dtype).reshape(-1)
+    nb = spec.nb
+    c = max(c, V * nb) if c % (V * nb) == 0 else c
+    pad = (-values.shape[0]) % c
+    if pad:
+        values = jnp.concatenate([values, jnp.zeros(pad, spec.dtype)])
+    chunks = values.reshape(-1, c)
+    f = choose_f(values, spec)
+    S0, C0 = init_state(f, spec)
+
+    inner_pad = (-c) % (V * nb)
+
+    def step(carry, chunk):
+        S, C = carry
+        if inner_pad:
+            chunk = jnp.concatenate([chunk, jnp.zeros(inner_pad, spec.dtype)])
+        blocks = chunk.reshape(-1, nb, V)
+        Sl, Cl = _expand_lanes(S, C, V, spec)
+
+        def outer(carry2, block):
+            S2, C2 = carry2
+            S2, C2 = _demote_while(S2, C2, jnp.max(jnp.abs(block)), spec,
+                                   lane_axis=True)
+
+            def inner(S3, b_v):
+                return _extract_into(S3, b_v, spec), None
+
+            S2, _ = lax.scan(inner, S2, block)
+            S2, C2 = _carry_propagate(S2, C2, spec)
+            return (S2, C2), None
+
+        (Sl, Cl), _ = lax.scan(outer, (Sl, Cl), blocks)
+        return _merge_lanes(Sl, Cl, spec), None
+
+    (S, C), _ = lax.scan(step, (S0, C0), chunks)
+    return S, C
+
+
+def finalize_state(S, C, spec: ReproSpec):
+    """Paper Eq. 1, evaluated last level first to avoid cancellation."""
+    u = eft.ufp(S)
+    terms = (S - 1.5 * u) + (0.25 * u) * C.astype(spec.dtype)
+    total = jnp.zeros((), spec.dtype)
+    for l in range(spec.L - 1, -1, -1):
+        total = total + terms[l]
+    return total
+
+
+def conventional_sum(values, dtype=None):
+    """The paper's CONV baseline (std::accumulate): plain float reduction."""
+    values = jnp.asarray(values)
+    if dtype is not None:
+        values = values.astype(dtype)
+    return jnp.sum(values)

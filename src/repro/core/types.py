@@ -1,0 +1,185 @@
+"""Shared numeric-format metadata for reproducible summation.
+
+The paper's ``repro<ScalarT, L>`` type is parameterized by a scalar float type
+and a number of extraction levels L.  This module centralizes the per-dtype
+constants (mantissa width m, default extractor spacing W, exponent field
+layout) and the derived bounds (block size NB between carry propagations,
+admission thresholds) used throughout :mod:`repro.core`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FloatSpec",
+    "FLOAT_SPECS",
+    "ReproSpec",
+    "float_spec",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatSpec:
+    """IEEE-754 layout constants for a binary float dtype."""
+
+    dtype: Any                # jnp dtype
+    int_dtype: Any            # same-width unsigned int dtype for bitcasts
+    m: int                    # number of *stored* mantissa bits (f32: 23)
+    exp_bits: int             # width of the exponent field
+    bias: int                 # exponent bias
+    default_w: int            # paper's recommended extractor spacing W
+
+    @property
+    def exp_mask(self) -> int:
+        return ((1 << self.exp_bits) - 1) << self.m
+
+    @property
+    def mant_mask(self) -> int:
+        return (1 << self.m) - 1
+
+    @property
+    def half_bit(self) -> int:
+        """Mantissa-field bit pattern of 0.5 (makes 1.5 * 2^e extractors)."""
+        return 1 << (self.m - 1)
+
+    @property
+    def max_exp(self) -> int:
+        """Largest unbiased exponent of a finite normal number."""
+        return (1 << self.exp_bits) - 2 - self.bias
+
+    @property
+    def min_exp(self) -> int:
+        """Smallest unbiased exponent of a normal number."""
+        return 1 - self.bias
+
+
+_F32 = FloatSpec(dtype=jnp.float32, int_dtype=jnp.uint32, m=23, exp_bits=8,
+                 bias=127, default_w=18)
+_F64 = FloatSpec(dtype=jnp.float64, int_dtype=jnp.uint64, m=52, exp_bits=11,
+                 bias=1023, default_w=40)
+
+FLOAT_SPECS = {
+    np.dtype(np.float32): _F32,
+    np.dtype(np.float64): _F64,
+}
+
+
+def float_spec(dtype) -> FloatSpec:
+    d = np.dtype(dtype)
+    if d not in FLOAT_SPECS:
+        raise ValueError(
+            f"repro accumulation supports float32/float64, got {d}. "
+            "bf16/f16 inputs should be upcast (exact) before accumulation.")
+    return FLOAT_SPECS[d]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReproSpec:
+    """Static configuration of a reproducible accumulator.
+
+    Mirrors the paper's ``repro<ScalarT, L>``:
+
+    * ``dtype``  — the scalar float type of the running sums (ScalarT).
+    * ``L``      — number of extraction levels (accuracy knob; L=2 ~ IEEE).
+    * ``W``      — log2 ratio between consecutive extractors.  The paper's
+      defaults are 18 (f32) and 40 (f64).  Smaller W lowers per-level
+      accuracy but raises the exact-accumulation block bound, which matters
+      for the MXU one-hot-matmul fast path (see kernels/segment_rsum).
+    """
+
+    dtype: Any = jnp.float32
+    L: int = 2
+    W: int | None = None
+
+    def __post_init__(self):
+        spec = float_spec(self.dtype)
+        w = self.W if self.W is not None else spec.default_w
+        object.__setattr__(self, "W", int(w))
+        if not (1 <= self.L <= 8):
+            raise ValueError(f"L must be in [1, 8], got {self.L}")
+        if not (2 <= self.W <= spec.m - 2):
+            raise ValueError(
+                f"W must be in [2, m-2] = [2, {spec.m - 2}], got {self.W}")
+
+    @property
+    def fspec(self) -> FloatSpec:
+        return float_spec(self.dtype)
+
+    @property
+    def m(self) -> int:
+        return self.fspec.m
+
+    @property
+    def nb(self) -> int:
+        """Max additions between carry propagations: NB <= 2^(m - W - 1).
+
+        Each contribution is bounded by 2^(W-1) ulp = 2^(W-1-m) ufp; the
+        running sum may drift at most 0.25 ufp from its window before its
+        exponent could change, giving NB * 2^(W-1-m) <= 2^-2.
+        """
+        return 1 << (self.m - self.W - 1)
+
+    @property
+    def window_ulps(self) -> int:
+        """Window width in ulps: 0.25 * ufp = 2^(m-2) ulp."""
+        return 1 << (self.m - 2)
+
+    def lattice_e1(self, max_exp):
+        """Snap the level-1 extractor exponent onto the lattice W * Z.
+
+        ``max_exp`` is the unbiased exponent of max|b| (ufp exponent).  The
+        admission condition |b| < 2^(W-1) * ulp(S1) = 2^(e1 - m + W - 1)
+        requires e1 >= E + m - W + 2; we snap *up* to a multiple of W so any
+        two accumulators have alignable level sets (associative merges).
+        """
+        e_needed = max_exp + self.m - self.W + 2
+        # ceil-div towards +inf on integers (works for negatives too)
+        return -((-e_needed) // self.W) * self.W
+
+    @property
+    def int_dtype(self):
+        """Integer dtype able to hold window offsets k in [0, 2^(m-2))."""
+        return jnp.int32 if self.m <= 30 else jnp.int64
+
+    @property
+    def tree_group(self) -> int:
+        """Safe fan-in for exact integer tree reduction of window offsets.
+
+        group * 2^(m-2) must not overflow the int dtype:
+        int32 -> 2^(33 - m) (f32: 1024; we halve for margin).
+        """
+        bits = 31 if self.m <= 30 else 63
+        return max(2, 1 << (bits - (self.m - 2) - 1))
+
+    @property
+    def lattice_lo(self) -> int:
+        """Smallest usable lattice e1 (extractor ladder stays normal)."""
+        lo = self.fspec.min_exp + self.m + (self.L - 1) * self.W
+        return -((-lo) // self.W) * self.W  # ceil to lattice
+
+    @property
+    def lattice_hi(self) -> int:
+        """Largest usable lattice e1 (extractor + window stay finite)."""
+        hi = self.fspec.max_exp - 1
+        return (hi // self.W) * self.W  # floor to lattice
+
+    def clamp_e1(self, e1):
+        """Clamp e1 into the representable range *staying on the lattice*.
+
+        The extractor ladder must consist of normal numbers whose ulp is
+        also normal (e_L - m >= min_exp, e_1 <= max_exp), and alignment of
+        accumulators requires every e1 to remain a multiple of W.  Inputs
+        outside ~[2^-100, 2^120] (f32) lose the reproducibility guarantee;
+        see DESIGN.md §3.2.
+        """
+        return jnp.clip(e1, self.lattice_lo, self.lattice_hi)
+
+    def level_exponents(self, e1):
+        """Exponents of all L extractors: e_l = e1 - (l-1) W."""
+        offs = jnp.arange(self.L, dtype=jnp.int32) * self.W
+        return jnp.asarray(e1, jnp.int32) - offs

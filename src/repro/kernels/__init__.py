@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the performance-critical aggregation hot spots.
+
+Each kernel ships as kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle); tests sweep
+shapes/configs and assert bitwise agreement with the oracle.
+"""
+from repro.kernels.rsum.ops import rsum, rsum_acc  # noqa: F401
+from repro.kernels.segment_rsum.ops import segment_rsum_kernel  # noqa: F401

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: flat reproducible sum (RSUM, paper §III-D).
+
+TPU adaptation of the paper's AVX kernel (DESIGN.md §3.3):
+
+* the V SIMD lanes become the 128 VPU lanes; per-lane running sums live in a
+  VMEM scratch accumulator of shape (L, 128) as exact integer window offsets;
+* the paper's NB-element carry-propagation cadence becomes one renorm per
+  grid block (block_rows * 2^(W-1) is kept below 2^30, so the int32 window
+  arithmetic can never overflow between renorms);
+* extraction against fixed lattice extractors A^(l) = 1.5 * 2^(e_l) runs on
+  the VPU as two float adds + one multiply + int convert per level;
+* the horizontal merge (paper Eq. 2/3) happens outside the kernel as an exact
+  integer lane reduction (ops.py).
+
+The grid is 1-D over row blocks and must execute sequentially (accumulator
+carried in scratch), which is the default "arbitrary" dimension semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _rsum_kernel(x_ref, a_ref, iu_ref, k_out, c_out, k_acc, c_acc,
+                 *, L: int, m: int):
+    i = pl.program_id(0)
+    nblk = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        k_acc[...] = jnp.zeros_like(k_acc)
+        c_acc[...] = jnp.zeros_like(c_acc)
+
+    r = x_ref[...]                                   # (rows, 128) float32
+    for l in range(L):
+        A = a_ref[l, 0]
+        q = (r + A) - A                              # EFT vs fixed extractor
+        r = r - q                                    # exact remainder
+        k = (q * iu_ref[l, 0]).astype(jnp.int32)     # exact: q = k * ulp
+        k_acc[l, :] += jnp.sum(k, axis=0)            # rows*2^(W-1) < 2^30
+
+    kk = k_acc[...]
+    d = kk >> (m - 2)                                # renorm (carry prop.)
+    k_acc[...] = kk - (d << (m - 2))
+    c_acc[...] += d
+
+    @pl.when(i == nblk - 1)
+    def _done():
+        k_out[...] = k_acc[...]
+        c_out[...] = c_acc[...]
+
+
+def rsum_pallas_call(x2d, A, inv_ulp, *, L: int, m: int, block_rows: int,
+                     interpret: bool):
+    """Launch the kernel.  x2d: (rows_total, 128) f32 with rows_total a
+    multiple of block_rows; A/inv_ulp: (L, 1) f32.  Returns per-lane
+    (k, C): (L, 128) int32 each."""
+    nblk = x2d.shape[0] // block_rows
+    kernel = functools.partial(_rsum_kernel, L=L, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((L, 1), lambda i: (0, 0)),
+            pl.BlockSpec((L, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((L, LANES), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((L, LANES), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((L, LANES), jnp.int32),
+            pltpu.VMEM((L, LANES), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x2d, A, inv_ulp)

@@ -1,0 +1,65 @@
+"""Jitted public wrapper for the flat reproducible-sum kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import accumulator as acc_mod
+from repro.core import eft
+from repro.core.accumulator import ReproAcc
+from repro.core.types import ReproSpec
+from repro.kernels.rsum.kernel import LANES, rsum_pallas_call
+
+__all__ = ["rsum", "rsum_acc"]
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def max_block_rows(spec: ReproSpec) -> int:
+    """Per-lane block sums must stay < 2^30: rows <= 2^(30 - (W-1))."""
+    return 1 << (30 - (spec.W - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block_rows",
+                                             "interpret"))
+def rsum_acc(x, spec: ReproSpec = ReproSpec(), block_rows: int = 1024,
+             interpret: bool | None = None) -> ReproAcc:
+    """Reproducible sum of all elements of ``x`` -> canonical accumulator.
+
+    Bit-identical to the pure-jnp oracle ``ref.rsum_ref`` for any block_rows
+    (associativity of the integer accumulation).
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    if spec.m > 30:
+        raise ValueError("the TPU kernel supports float32 accumulators")
+    block_rows = min(block_rows, max_block_rows(spec))
+    x = jnp.asarray(x, spec.dtype).reshape(-1)
+    e1 = acc_mod.required_e1(x, spec)
+    es = e1 - jnp.arange(spec.L, dtype=jnp.int32) * spec.W
+    A = eft.extractor(es, spec.dtype).reshape(spec.L, 1)
+    inv_ulp = eft.pow2(spec.m - es, spec.dtype).reshape(spec.L, 1)
+
+    per_blk = block_rows * LANES
+    pad = (-x.shape[0]) % per_blk
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros(pad, spec.dtype)])
+    x2d = x.reshape(-1, LANES)
+
+    k_l, c_l = rsum_pallas_call(x2d, A, inv_ulp, L=spec.L, m=spec.m,
+                                block_rows=block_rows, interpret=interpret)
+    # horizontal merge (paper Eq. 2/3) as an exact int reduction over lanes
+    k = k_l.astype(spec.int_dtype).sum(axis=1)       # <= 128 * 2^(m-2) < 2^31
+    C = c_l.astype(spec.int_dtype).sum(axis=1)
+    k, C = acc_mod.renorm(k, C, spec)
+    return ReproAcc(k=k, C=C, e1=e1)
+
+
+def rsum(x, spec: ReproSpec = ReproSpec(), block_rows: int = 1024,
+         interpret: bool | None = None):
+    """Finalized reproducible sum (float scalar)."""
+    return acc_mod.finalize(rsum_acc(x, spec, block_rows, interpret), spec)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the flat reproducible-sum kernel."""
+from __future__ import annotations
+
+from repro.core import accumulator as acc_mod
+from repro.core.accumulator import ReproAcc
+from repro.core.types import ReproSpec
+
+__all__ = ["rsum_ref", "rsum_acc_ref"]
+
+
+def rsum_acc_ref(x, spec: ReproSpec = ReproSpec()) -> ReproAcc:
+    """Canonical accumulator of sum(x) — must match ops.rsum_acc bitwise."""
+    return acc_mod.from_values(x, spec)
+
+
+def rsum_ref(x, spec: ReproSpec = ReproSpec()):
+    return acc_mod.finalize(rsum_acc_ref(x, spec), spec)

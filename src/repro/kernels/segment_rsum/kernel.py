@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: reproducible GROUPBY (segment RSUM, paper §V).
+
+TPU adaptation (DESIGN.md §3.2 item 4): the paper's cache-resident summation
+buffers become MXU tiles.  Per level, the extracted contributions q are exact
+integer multiples of ulp(A^(l)); a (block_n x group_tile) one-hot matmul sums
+them *exactly* in float32 provided block_n <= 2^(m - W + 2) — the float
+mantissa never fills.  The per-group running sums live as int32 window
+offsets in VMEM scratch with one renormalization (carry propagation) per
+input block.
+
+Grid: (group_tiles, input_blocks) — inner axis sequential (accumulation);
+each input block is re-streamed once per group tile, trading HBM reads for
+MXU-friendly tiles exactly the way the paper trades partitioning passes for
+cache residency.  The W knob trades per-level accuracy for tile size
+(W=18 -> 128-row tiles; W=12 -> 8192-row tiles), the TPU analogue of the
+paper's bsz/cache trade-off (§V-C).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def exact_block_bound(m: int, W: int) -> int:
+    """Max rows per one-hot matmul with exact f32 accumulation: 2^(m-W+2)."""
+    return 1 << (m - W + 2)
+
+
+def _segment_kernel(ids_ref, x_ref, a_ref, iu_ref, k_out, c_out,
+                    k_acc, c_acc, *, L: int, m: int, block_n: int,
+                    group_tile: int):
+    ni = pl.program_id(1)
+    nblk = pl.num_programs(1)
+    gi = pl.program_id(0)
+
+    @pl.when(ni == 0)
+    def _init():
+        k_acc[...] = jnp.zeros_like(k_acc)
+        c_acc[...] = jnp.zeros_like(c_acc)
+
+    ids = ids_ref[...].reshape(block_n, 1)                   # int32
+    base = gi * group_tile
+    col = jax.lax.broadcasted_iota(jnp.int32, (block_n, group_tile), 1) + base
+    onehot = (ids == col).astype(jnp.float32)                # (bn, gt)
+
+    r = x_ref[...].reshape(1, block_n)                       # f32
+    for l in range(L):
+        A = a_ref[l, 0]
+        q = (r + A) - A                                      # EFT, fixed A
+        r = r - q
+        # exact: per-group |sum q| <= block_n * 2^(W-1) ulp <= 2^(m+1) ulp
+        part = jax.lax.dot_general(
+            q, onehot, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (1, gt)
+        k_acc[l, :] += (part.reshape(group_tile)
+                        * iu_ref[l, 0]).astype(jnp.int32)
+
+    kk = k_acc[...]
+    d = kk >> (m - 2)                                        # carry prop.
+    k_acc[...] = kk - (d << (m - 2))
+    c_acc[...] += d
+
+    @pl.when(ni == nblk - 1)
+    def _done():
+        k_out[...] = k_acc[...]
+        c_out[...] = c_acc[...]
+
+
+def segment_rsum_pallas_call(ids2d, x2d, A, inv_ulp, *, L: int, m: int,
+                             block_n: int, group_tile: int, num_group_tiles:
+                             int, interpret: bool):
+    """ids2d/x2d: (nblk, block_n); A/inv_ulp: (L, 1) f32.
+    Returns (k, C): (L, G_padded) int32 with G_padded = tiles * group_tile."""
+    nblk = ids2d.shape[0]
+    kernel = functools.partial(_segment_kernel, L=L, m=m, block_n=block_n,
+                               group_tile=group_tile)
+    g_total = num_group_tiles * group_tile
+    return pl.pallas_call(
+        kernel,
+        grid=(num_group_tiles, nblk),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda gi, ni: (ni, 0)),
+            pl.BlockSpec((1, block_n), lambda gi, ni: (ni, 0)),
+            pl.BlockSpec((L, 1), lambda gi, ni: (0, 0)),
+            pl.BlockSpec((L, 1), lambda gi, ni: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, group_tile), lambda gi, ni: (0, gi)),
+            pl.BlockSpec((L, group_tile), lambda gi, ni: (0, gi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, g_total), jnp.int32),
+            jax.ShapeDtypeStruct((L, g_total), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((L, group_tile), jnp.int32),
+            pltpu.VMEM((L, group_tile), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids2d, x2d, A, inv_ulp)

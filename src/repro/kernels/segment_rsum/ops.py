@@ -1,0 +1,65 @@
+"""Jitted public wrapper for the segment RSUM (GROUPBY) kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import accumulator as acc_mod
+from repro.core import eft
+from repro.core.accumulator import ReproAcc
+from repro.core.types import ReproSpec
+from repro.kernels.segment_rsum.kernel import (exact_block_bound,
+                                               segment_rsum_pallas_call)
+
+__all__ = ["segment_rsum_kernel", "exact_block_bound"]
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "spec",
+                                             "block_n", "group_tile",
+                                             "interpret"))
+def segment_rsum_kernel(values, segment_ids, num_segments: int,
+                        spec: ReproSpec = ReproSpec(),
+                        block_n: int | None = None, group_tile: int = 512,
+                        interpret: bool | None = None) -> ReproAcc:
+    """Reproducible GROUPBY-SUM on the MXU.  Bit-identical to
+    ``repro.core.segment.segment_rsum`` (any method) and to ref.py."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    if spec.m > 30:
+        raise ValueError("the TPU kernel supports float32 accumulators")
+    bound = exact_block_bound(spec.m, spec.W)
+    block_n = min(block_n or bound, bound)
+    values = jnp.asarray(values, spec.dtype).reshape(-1)
+    segment_ids = jnp.asarray(segment_ids, jnp.int32).reshape(-1)
+
+    e1 = acc_mod.required_e1(values, spec)
+    es = e1 - jnp.arange(spec.L, dtype=jnp.int32) * spec.W
+    A = eft.extractor(es, spec.dtype).reshape(spec.L, 1)
+    inv_ulp = eft.pow2(spec.m - es, spec.dtype).reshape(spec.L, 1)
+
+    n = values.shape[0]
+    pad = (-n) % block_n
+    if pad:
+        values = jnp.concatenate([values, jnp.zeros(pad, spec.dtype)])
+        # padding ids = -1: matches no group tile
+        segment_ids = jnp.concatenate(
+            [segment_ids, jnp.full(pad, -1, jnp.int32)])
+    x2d = values.reshape(-1, block_n)
+    ids2d = segment_ids.reshape(-1, block_n)
+
+    group_tile = min(group_tile, max(num_segments, 8))
+    n_tiles = -(-num_segments // group_tile)
+
+    k, C = segment_rsum_pallas_call(
+        ids2d, x2d, A, inv_ulp, L=spec.L, m=spec.m, block_n=block_n,
+        group_tile=group_tile, num_group_tiles=n_tiles, interpret=interpret)
+    k = k[:, :num_segments].T.astype(spec.int_dtype)     # (G, L)
+    C = C[:, :num_segments].T.astype(spec.int_dtype)
+    e1_b = jnp.broadcast_to(e1, (num_segments,))
+    return ReproAcc(k=k, C=C, e1=e1_b)

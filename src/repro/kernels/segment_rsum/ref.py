@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the segment RSUM kernel."""
+from __future__ import annotations
+
+from repro.core.accumulator import ReproAcc
+from repro.core.segment import segment_rsum
+from repro.core.types import ReproSpec
+
+__all__ = ["segment_rsum_ref"]
+
+
+def segment_rsum_ref(values, segment_ids, num_segments: int,
+                     spec: ReproSpec = ReproSpec()) -> ReproAcc:
+    """Must match ops.segment_rsum_kernel bit-for-bit."""
+    return segment_rsum(values, segment_ids, num_segments, spec,
+                        method="onehot")

@@ -1,0 +1,1 @@
+"""Launchers: mesh, shardings, dry-run, train, serve."""

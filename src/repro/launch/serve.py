@@ -1,0 +1,86 @@
+"""Batched serving driver: prefill + decode loop with continuous batching.
+
+CLI (CPU demo):
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+      --batch 4 --prompt-len 16 --gen 16
+
+Serving reproducibility note: decode is deterministic per (params, prompt,
+positions) by construction (greedy argmax, fixed-shape steps).  The repro
+aggregation layer matters on the *training* side; in serving it guarantees
+that logits/metrics aggregated across replicas (e.g. eval-loss sweeps)
+are replica-count-independent.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as registry
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+
+
+def generate(params, cfg, prompts, max_seq: int, gen_steps: int):
+    """Greedy generation for a fixed batch of token prompts (B, P)."""
+    B, PL = prompts.shape
+    logits, caches = jax.jit(
+        lambda p, b: lm.prefill_step(p, b, cfg, max_seq))(
+            params, {"tokens": prompts})
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+
+    @jax.jit
+    def step(params, caches, tok, pos):
+        batch = {"tokens": tok, "positions": pos}
+        lg, caches = lm.decode_step(params, caches, batch, cfg)
+        nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, caches
+
+    for i in range(gen_steps - 1):
+        pos = jnp.full((B, 1), PL + i, jnp.int32)
+        tok, caches = step(params, caches, tok, pos)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.embed_frontend == "stub":
+        raise SystemExit("serve CLI demo supports token-frontend archs")
+    mesh = make_host_mesh(args.data, args.model)
+    with jax.set_mesh(mesh):
+        params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
+        rng = np.random.default_rng(args.seed)
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
+            jnp.int32)
+        t0 = time.time()
+        toks = generate(params, cfg, prompts,
+                        max_seq=args.prompt_len + args.gen,
+                        gen_steps=args.gen)
+        dt = time.time() - t0
+    print(f"generated {toks.shape} tokens in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print(np.asarray(toks[0]))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,155 @@
+"""Parameter / optimizer / activation sharding rules (single source of truth).
+
+Megatron-style TP over the "model" axis:
+  * embeddings & lm_head:        vocab-sharded
+  * attention wq/wk/wv:          column-parallel (head dim)
+  * attention wo:                row-parallel
+  * MLP w_gate/w_up:             column-parallel (ff)
+  * MLP w_down:                  row-parallel
+  * MoE expert weights:          expert-parallel (E over "model")
+  * SSM/xLSTM projections:       column/row-parallel analogues
+Stacked block params carry a leading (n_units,) axis -> spec prepended None.
+
+ZeRO sharding for optimizer state (and master weights): the first dimension
+not claimed by the model axis whose size divides the data-axis size.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# name -> (model_sharded_dim_from_right) ; dims counted on the *unstacked*
+# parameter (the stacked unit axis is handled separately).
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_zifo", "w_gates"}
+_ROW = {"wo", "w_down", "w_out", "w_bcdt"}
+_EXPERT = {"moe"}       # parent key marking expert-stacked weights
+_VOCAB = {"embed", "lm_head"}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+    return tuple(names)
+
+
+def param_pspec(path, leaf) -> P:
+    names = _path_names(path)
+    last = names[-1] if names else ""
+    stacked = "blocks" in names
+    ndim = leaf.ndim
+
+    def with_stack(spec_tail):
+        """prepend Nones so the tail aligns to the last dims"""
+        pad = ndim - len(spec_tail)
+        return P(*([None] * pad + list(spec_tail)))
+
+    if last in _VOCAB:
+        return P("model", None)
+    in_moe = "moe" in names
+    if in_moe and last in {"w_gate", "w_up", "w_down"}:
+        # (E, D, F) / (E, F, D): expert-parallel
+        return with_stack(["model", None, None])
+    if last == "router":
+        return with_stack([None, None])
+    if last in _COL:
+        return with_stack([None, "model"])
+    if last in _ROW:
+        return with_stack(["model", None])
+    return P(*([None] * ndim))           # norms, scalars, vectors
+
+
+def zero_pspec(path, leaf, data_size: int, dp=("data",),
+               axis_sizes: dict | None = None) -> P:
+    """Sharding for optimizer-state / master copies of this parameter:
+    the (validated) param spec + the DP axes on the first eligible dim."""
+    base = param_pspec(path, leaf)
+    if axis_sizes is not None:
+        base = validate_pspec(base, leaf.shape, axis_sizes)
+    entries = list(base) + [None] * (leaf.ndim - len(base))
+    dp_entry = tuple(dp) if len(dp) > 1 else dp[0]
+    for i, (dim, e) in enumerate(zip(leaf.shape, entries)):
+        if e is None and dim % data_size == 0 and dim >= data_size:
+            entries[i] = dp_entry
+            return P(*entries)
+    return base                           # small leaf: stays unsharded
+
+
+def param_shardings(mesh, params):
+    sizes = dict(mesh.shape)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, validate_pspec(param_pspec(path, leaf), leaf.shape, sizes)),
+        params)
+
+
+def param_pspecs(params):
+    return jax.tree_util.tree_map_with_path(param_pspec, params)
+
+
+def zero_pspecs(params, data_size: int, dp=("data",)):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: zero_pspec(path, leaf, data_size, dp), params)
+
+
+def validate_pspec(pspec: P, shape, axis_sizes: dict) -> P:
+    """Drop spec entries whose mesh-axis product does not divide the dim —
+    explicit input shardings must tile evenly (XLA pads only intermediates).
+    The dropped-axis cases (9-head smollm, 25-head hymba, 32001-vocab, ...)
+    are the padding-overhead notes in DESIGN.md §5."""
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    out = []
+    for dim, e in zip(shape, entries):
+        if e is None:
+            out.append(None)
+            continue
+        names = e if isinstance(e, (tuple, list)) else (e,)
+        factor = 1
+        for n in names:
+            factor *= axis_sizes[n]
+        out.append(e if dim % factor == 0 else None)
+    return P(*out)
+
+
+def manual_only(pspec: P, manual_axes) -> P:
+    """Strip non-manual axis names from a spec (shard_map in_specs may only
+    reference the manual axes; auto-axis shardings ride on the arguments)."""
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a in manual_axes)
+            return kept if len(kept) > 1 else (kept[0] if kept else None)
+        return e if e in manual_axes else None
+    return P(*[keep(e) for e in pspec])
+
+
+def tree_manual_only(pspecs, manual_axes):
+    return jax.tree.map(lambda s: manual_only(s, manual_axes), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(dp_axes: tuple, ndim: int, batch_dim: int = 0) -> P:
+    entries = [None] * ndim
+    entries[batch_dim] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return P(*entries)
+
+
+def cache_pspecs(dp_axes: tuple, seq_axis_name: Optional[str] = "model"):
+    """Decode KV caches: batch over DP, cache slots over 'model' (context
+    parallelism) — the only way a 32k x 46-layer cache fits HBM."""
+    def kv_spec(leaf_ndim):
+        # (units, B, slots, KV, hd) and (units, B, slots)
+        entries = [None] * leaf_ndim
+        entries[1] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        entries[2] = seq_axis_name
+        return P(*entries)
+    return kv_spec

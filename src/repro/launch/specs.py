@@ -1,0 +1,179 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape x mesh) cell.
+
+The dry-run never allocates: parameters, optimizer state, caches and batches
+are all ShapeDtypeStructs with attached NamedShardings (weak-type-correct,
+shardable).  These functions are the single source of truth for what a cell's
+step function consumes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import shardings as sh
+from repro.launch.mesh import dp_axes, dp_size
+from repro.launch.train_step import TrainConfig
+from repro.models import lm, transformer
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adamw as adamw_mod
+
+
+def _sds(shape, dtype, mesh=None, pspec: Optional[P] = None):
+    sharding = NamedSharding(mesh, pspec) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _dp(mesh):
+    axes = dp_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def param_specs(cfg: ModelConfig, mesh):
+    """Abstract params with TP shardings attached."""
+    shapes = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    sizes = dict(mesh.shape)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _sds(
+            leaf.shape, leaf.dtype, mesh,
+            sh.validate_pspec(sh.param_pspec(path, leaf), leaf.shape, sizes)),
+        shapes)
+
+
+def opt_specs(cfg: ModelConfig, mesh, zero: bool = True):
+    """Abstract AdamW state; moments/master ZeRO-sharded over data."""
+    p_shapes = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    o_shapes = jax.eval_shape(adamw_mod.init, p_shapes)
+    dsize = dp_size(mesh)
+
+    dp = dp_axes(mesh)
+    sizes = dict(mesh.shape)
+
+    def one(tree):
+        def f(path, leaf):
+            pspec = (sh.zero_pspec(path, leaf, dsize, dp, sizes) if zero
+                     else sh.param_pspec(path, leaf))
+            return _sds(leaf.shape, leaf.dtype, mesh,
+                        sh.validate_pspec(pspec, leaf.shape, sizes))
+        return jax.tree_util.tree_map_with_path(f, tree)
+
+    return type(o_shapes)(mu=one(o_shapes.mu), nu=one(o_shapes.nu),
+                          master=one(o_shapes.master),
+                          count=_sds((), jnp.int32, mesh, P()))
+
+
+def opt_pspecs(cfg: ModelConfig, mesh, zero: bool = True):
+    p_shapes = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    o_shapes = jax.eval_shape(adamw_mod.init, p_shapes)
+    dsize = dp_size(mesh)
+
+    dp = dp_axes(mesh)
+    sizes = dict(mesh.shape)
+
+    def one(tree):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: sh.validate_pspec(
+                (sh.zero_pspec(path, leaf, dsize, dp, sizes) if zero
+                 else sh.param_pspec(path, leaf)), leaf.shape, sizes), tree)
+
+    return type(o_shapes)(mu=one(o_shapes.mu), nu=one(o_shapes.nu),
+                          master=one(o_shapes.master), count=P())
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      train_cfg: TrainConfig, mesh):
+    """Batch: (n_quanta, mb, ...) with quanta sharded over DP axes."""
+    nq = shape.global_batch // train_cfg.mb_size
+    mb, S = train_cfg.mb_size, shape.seq_len
+    dp = _dp(mesh)
+    batch = {"targets": _sds((nq, mb, S), jnp.int32, mesh, P(dp))}
+    if cfg.embed_frontend == "stub":
+        batch["embeds"] = _sds((nq, mb, S, cfg.d_model), jnp.bfloat16,
+                               mesh, P(dp))
+    else:
+        batch["tokens"] = _sds((nq, mb, S), jnp.int32, mesh, P(dp))
+    if cfg.rope_kind == "mrope":
+        batch["positions"] = _sds((nq, mb, 3, S), jnp.int32, mesh, P(dp))
+    return batch
+
+
+def _maybe_dp(mesh, n):
+    """DP spec entry only when the dim divides over the DP axes."""
+    return _dp(mesh) if n % dp_size(mesh) == 0 else None
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    dp = _maybe_dp(mesh, B)
+    batch = {}
+    if cfg.embed_frontend == "stub":
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                               P(dp))
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32, mesh, P(dp))
+    if cfg.rope_kind == "mrope":
+        batch["positions"] = _sds((B, 3, S), jnp.int32, mesh, P(dp))
+    return batch
+
+
+def _state_pspec(leaf, mesh):
+    """Decode-state sharding heuristic: batch dim over DP when divisible,
+    the largest model-divisible trailing dim over 'model' (context
+    parallelism for KV slots; head/feature parallelism for SSM states)."""
+    msize = mesh.shape["model"]
+    entries = [None] * leaf.ndim
+    if leaf.ndim >= 2:
+        entries[1] = _maybe_dp(mesh, leaf.shape[1])
+    best, best_dim = None, 0
+    for i in range(2, leaf.ndim):
+        if leaf.shape[i] % msize == 0 and leaf.shape[i] > best_dim:
+            best, best_dim = i, leaf.shape[i]
+    if best is not None:
+        entries[best] = "model"
+    return P(*entries)
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(
+        functools.partial(transformer.stack_cache_init, B, S, cfg))
+    return jax.tree.map(
+        lambda leaf: _sds(leaf.shape, leaf.dtype, mesh,
+                          _state_pspec(leaf, mesh)), shapes)
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """NamedSharding tree for caches (prefill out_shardings / decode io)."""
+    B, S = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(
+        functools.partial(transformer.stack_cache_init, B, S, cfg))
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, _state_pspec(leaf, mesh)), shapes)
+
+
+def logits_sharding(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    dp = _maybe_dp(mesh, shape.global_batch)
+    v = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+    return NamedSharding(mesh, P(dp, None, v))
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    B = shape.global_batch
+    dp = _maybe_dp(mesh, B)
+    batch = {}
+    if cfg.embed_frontend == "stub":
+        batch["embeds"] = _sds((B, 1, cfg.d_model), jnp.bfloat16, mesh,
+                               P(dp))
+    else:
+        batch["tokens"] = _sds((B, 1), jnp.int32, mesh, P(dp))
+    if cfg.rope_kind == "mrope":
+        batch["positions"] = _sds((B, 3, 1), jnp.int32, mesh, P(dp))
+    else:
+        batch["positions"] = _sds((B, 1), jnp.int32, mesh, P(dp))
+    return batch

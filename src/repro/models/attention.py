@@ -1,0 +1,228 @@
+"""GQA attention: flash-style chunked prefill/train + ring-buffer KV decode.
+
+Supports sliding windows (gemma2 local layers, hymba), logit softcapping
+(gemma2), GQA head grouping, RoPE/M-RoPE applied by the caller.
+
+The chunked attention scans over KV blocks with running (max, denom, out)
+accumulators so the (S x S) score matrix is never materialized — required
+for the prefill_32k shape.  The KV cache is a ring buffer over ``slots``
+(= seq_len for full attention, = window for sliding windows, making hymba's
+long_500k state O(window) instead of O(S)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, window: bool):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], (D, H * hd), cfg.pdtype),
+        "wk": common.dense_init(ks[1], (D, KV * hd), cfg.pdtype),
+        "wv": common.dense_init(ks[2], (D, KV * hd), cfg.pdtype),
+        "wo": common.dense_init(ks[3], (H * hd, D), cfg.pdtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = common.rmsnorm_init(hd, cfg.pdtype)
+        p["k_norm"] = common.rmsnorm_init(hd, cfg.pdtype)
+    return p
+
+
+def _attn_constraint(q, k, v, cfg: ModelConfig):
+    """Pin the attention TP layout (cfg.attn_shard; DESIGN.md §5).
+
+    'replicate' removes the per-chunk partial-sum all-reduces GSPMD emits
+    when head counts do not divide the model axis — measured ~1.2 TB/step
+    on llama3.2-3b train_4k (EXPERIMENTS.md §Perf iter.4)."""
+    from jax.sharding import PartitionSpec as P
+    if cfg.attn_shard == "auto" or q.shape[1] == 1:
+        return q, k, v
+    wsc = jax.lax.with_sharding_constraint
+    if cfg.attn_shard == "replicate":
+        spec = P(None, None, None, None)
+        return wsc(q, spec), wsc(k, spec), wsc(v, spec)
+    if cfg.attn_shard == "heads":
+        qs = P(None, None, "model", None)
+        return wsc(q, qs), wsc(k, qs), wsc(v, qs)
+    raise ValueError(cfg.attn_shard)
+
+
+def _project_qkv(x, p, cfg: ModelConfig, positions):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = cfg.cdtype
+    q = (x @ p["wq"].astype(cd)).reshape(B, S, H, hd)
+    k = (x @ p["wk"].astype(cd)).reshape(B, S, KV, hd)
+    v = (x @ p["wv"].astype(cd)).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = common.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = common.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_kind == "rope":
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_kind == "mrope":
+        q = common.apply_mrope(q, positions, cfg.rope_theta,
+                               cfg.mrope_sections)
+        k = common.apply_mrope(k, positions, cfg.rope_theta,
+                               cfg.mrope_sections)
+    q, k, v = _attn_constraint(q, k, v, cfg)
+    return q, k, v
+
+
+def flash_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                    softcap: float = 0.0, kv_chunk: int = 512):
+    """Causal chunked attention.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd); q_pos: (B, Sq); kv_pos: (B, Skv).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = (q * scale).reshape(B, Sq, KV, G, hd)
+
+    Skv = k.shape[1]
+    kv_chunk = min(kv_chunk, Skv)
+    pad = (-Skv) % kv_chunk
+    if pad:
+        zpad = jnp.zeros((B, pad, KV, hd), k.dtype)
+        k = jnp.concatenate([k, zpad], 1)
+        v = jnp.concatenate([v, zpad], 1)
+        kv_pos = jnp.concatenate(
+            [kv_pos, jnp.full((B, pad), jnp.int32(2 ** 30), jnp.int32)], 1)
+    nkc = k.shape[1] // kv_chunk
+    ks = k.reshape(B, nkc, kv_chunk, KV, hd).swapaxes(0, 1)
+    vs = v.reshape(B, nkc, kv_chunk, KV, hd).swapaxes(0, 1)
+    ps = kv_pos.reshape(B, nkc, kv_chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        m, l, o = carry
+        k_c, v_c, p_c = xs
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qg, k_c,
+                       preferred_element_type=jnp.float32)
+        if softcap:
+            s = common.softcap(s, softcap)
+        mask = p_c[:, None, :] <= q_pos[:, :, None]          # causal
+        if window:
+            mask &= (q_pos[:, :, None] - p_c[:, None, :]) < window
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p, v_c.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    o0 = jnp.zeros((B, Sq, KV, G, hd), jnp.float32)
+    (m, l, o), _ = lax.scan(body, (m0, l0, o0), (ks, vs, ps))
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer cache: slots = window for sliding layers else seq_len."""
+    k: jax.Array          # (B, slots, KV, hd)
+    v: jax.Array          # (B, slots, KV, hd)
+    pos: jax.Array        # (B, slots) int32, -1 = empty
+
+
+def cache_init(batch, slots, cfg: ModelConfig, dtype=None):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    dt = dtype or cfg.cdtype
+    return KVCache(
+        k=jnp.zeros((batch, slots, KV, hd), dt),
+        v=jnp.zeros((batch, slots, KV, hd), dt),
+        pos=jnp.full((batch, slots), -1, jnp.int32),
+    )
+
+
+def cache_update(cache: KVCache, k_new, v_new, pos):
+    """Insert one token per sequence.  k_new/v_new: (B, 1, KV, hd);
+    pos: (B,) int32 absolute positions."""
+    slots = cache.k.shape[1]
+    slot = (pos % slots).astype(jnp.int32)                   # (B,)
+    b_idx = jnp.arange(cache.k.shape[0])
+    k = cache.k.at[b_idx, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[b_idx, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    p = cache.pos.at[b_idx, slot].set(pos.astype(jnp.int32))
+    return KVCache(k=k, v=v, pos=p)
+
+
+def cache_fill(cache: KVCache, k, v, positions):
+    """Bulk-fill the cache from a prefill pass.  k/v: (B, S, KV, hd);
+    positions: (B, S).  If S > slots, only the last ``slots`` tokens are
+    kept (ring semantics, deterministic last-write-wins)."""
+    slots = cache.k.shape[1]
+    S = k.shape[1]
+    if S > slots:
+        k, v, positions = k[:, -slots:], v[:, -slots:], positions[:, -slots:]
+        S = slots
+    slot = (positions % slots).astype(jnp.int32)             # (B, S)
+    b_idx = jnp.arange(k.shape[0])[:, None]
+    return KVCache(
+        k=cache.k.at[b_idx, slot].set(k.astype(cache.k.dtype)),
+        v=cache.v.at[b_idx, slot].set(v.astype(cache.v.dtype)),
+        pos=cache.pos.at[b_idx, slot].set(positions.astype(jnp.int32)),
+    )
+
+
+def decode_attention(q, cache: KVCache, q_pos, *, window: int = 0,
+                     softcap: float = 0.0):
+    """Single-step attention against the cache.  q: (B, 1, H, hd)."""
+    B, _, H, hd = q.shape
+    KV = cache.k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = (q * scale).reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, cache.k,
+                   preferred_element_type=jnp.float32)
+    if softcap:
+        s = common.softcap(s, softcap)
+    mask = (cache.pos >= 0) & (cache.pos <= q_pos[:, None])
+    if window:
+        mask &= (q_pos[:, None] - cache.pos) < window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, cache.v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attention_block(x, p, cfg: ModelConfig, positions, *, window: int,
+                    cache: Optional[KVCache] = None):
+    """Full attention sublayer.  In decode mode (cache given, S==1) the
+    cache is updated and attended; otherwise flash attention over x itself.
+
+    Returns (out, new_cache)."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    if cache is not None and S == 1:
+        pos = positions if positions.ndim == 1 else positions[:, 0]
+        if cfg.rope_kind == "mrope":
+            pos = positions[:, 0, 0]                        # temporal id
+        cache = cache_update(cache, k, v, pos)
+        out = decode_attention(q, cache, pos, window=window,
+                               softcap=cfg.softcap_attn)
+    else:
+        qp = positions if positions.ndim == 2 else positions[:, 0]
+        if cfg.rope_kind == "mrope":
+            qp = positions[:, 0, :]
+        if cache is not None:                               # prefill: fill
+            cache = cache_fill(cache, k, v, qp)
+        out = flash_attention(q, k, v, qp, qp, window=window,
+                              softcap=cfg.softcap_attn)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(cfg.cdtype), cache

@@ -1,0 +1,201 @@
+"""Shared model layers: norms, embeddings, rotary embeddings, MLPs, losses.
+
+Functional style: ``init_*`` builds param pytrees (plain dicts), ``apply``
+logic lives in pure functions.  Initializers take an explicit PRNG key and
+dtype so smoke tests are cheap while dry-runs use jax.eval_shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import accumulator as acc_mod
+from repro.core import segment as segment_mod
+from repro.core.types import ReproSpec
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}      # gemma-style (1 + scale)
+
+
+def rmsnorm(x, params, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                         # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """qwen2-vl M-RoPE: positions3 (B, 3, S) — temporal/height/width ids;
+    the head dim's rotary pairs are split into per-component sections."""
+    import numpy as np
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                         # (hd/2,)
+    # assign each rotary pair to a position component (static)
+    comp = np.repeat(np.arange(len(sections)), sections)[: hd // 2]
+    pos = positions3.astype(jnp.float32)[:, comp, :]       # (B, hd/2, S)
+    ang = jnp.einsum("bfs,f->bsf", pos, freqs)             # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, d_ff), dtype),
+        "w_up": dense_init(k2, (d, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d), dtype),
+    }
+
+
+def mlp(x, params, act: str, compute_dtype):
+    w_g = params["w_gate"].astype(compute_dtype)
+    w_u = params["w_up"].astype(compute_dtype)
+    w_d = params["w_down"].astype(compute_dtype)
+    g = x @ w_g
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return (g * (x @ w_u)) @ w_d
+
+
+# ---------------------------------------------------------------------------
+# softcap (gemma2)
+# ---------------------------------------------------------------------------
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Embedding with optional reproducible gradient (GROUPBY over token ids)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_embed_repro(vocab: int, d: int, dtype_str: str, spec: ReproSpec,
+                      chunk: int):
+    @jax.custom_vjp
+    def f(table, ids):
+        return jnp.take(table, ids, axis=0)
+
+    def fwd(table, ids):
+        return f(table, ids), ids
+
+    def bwd(ids, g):
+        # The embedding gradient IS a GROUPBY-SUM over token ids — the
+        # paper's operation inside the training loop.  Reproducible for any
+        # sharding / microbatch order of the incoming cotangents.
+        flat_ids = ids.reshape(-1)
+        flat_g = g.reshape(-1, d).astype(jnp.float32)
+        acc = segment_mod.segment_rsum(flat_g, flat_ids, vocab, spec,
+                                       method="scatter", chunk=chunk)
+        grad = acc_mod.finalize(acc, spec).astype(dtype_str)
+        return grad, None
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def embed_lookup(table, ids, repro_spec: Optional[ReproSpec] = None,
+                 chunk: int = 4096):
+    if repro_spec is None:
+        return jnp.take(table, ids, axis=0)
+    vocab, d = table.shape
+    fn = _make_embed_repro(int(vocab), int(d), str(table.dtype),
+                           repro_spec, chunk)
+    return fn(table, ids)
+
+
+# ---------------------------------------------------------------------------
+# Chunked softmax cross-entropy (vocab-sharded friendly)
+# ---------------------------------------------------------------------------
+
+def chunked_xent(hidden, embed_table, targets, cfg: ModelConfig,
+                 chunk: int = 512):
+    """hidden: (B, S, D) -> mean xent against targets (B, S).
+
+    Computes logits in sequence chunks under a scan so the (B, S, V) logit
+    tensor is never materialized; each chunk is rematerialized in backward.
+    """
+    B, S, D = hidden.shape
+    V = embed_table.shape[0]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = hidden.shape[1] // chunk
+    h = hidden.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)
+    t = targets.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    table = embed_table.astype(cfg.cdtype)
+
+    @jax.checkpoint
+    def chunk_loss(h_c, t_c):
+        logits = (h_c.astype(cfg.cdtype) @ table.T).astype(jnp.float32)
+        if cfg.softcap_final:
+            logits = softcap(logits, cfg.softcap_final)
+        if cfg.logit_scale:
+            logits = logits * cfg.logit_scale
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(t_c, 0)[..., None], axis=-1)[..., 0]
+        mask = (t_c >= 0).astype(jnp.float32)
+        return ((lse - picked) * mask).sum(), mask.sum()
+
+    def body(carry, xs):
+        tot, cnt = carry
+        l, c = chunk_loss(*xs)
+        return (tot + l, cnt + c), None
+
+    (tot, cnt), _ = lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (h, t))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,119 @@
+"""The language model: embeddings -> stack -> (chunked) loss / logits.
+
+Three entry points matching the assigned input-shape kinds:
+
+* :func:`loss_fn`       — training objective (chunked xent, aux losses).
+* :func:`prefill_step`  — inference prefill: fills KV caches, returns the
+                          last-position logits.
+* :func:`decode_step`   — one-token decode against caches.
+
+``embed_frontend == "stub"`` architectures (musicgen EnCodec frames,
+qwen2-vl patches) accept precomputed ``embeds`` instead of token ids; the
+target/vocab head is unchanged.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ReproSpec
+from repro.models import common, transformer
+from repro.models.config import ModelConfig
+
+
+def init_params(key, cfg: ModelConfig):
+    k_embed, k_stack, k_head = jax.random.split(key, 3)
+    params = {
+        "embed": common.embed_init(k_embed, (cfg.vocab, cfg.d_model),
+                                   cfg.pdtype),
+        "blocks": transformer.stack_init(k_stack, cfg),
+        "final_norm": common.rmsnorm_init(cfg.d_model, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.embed_init(
+            k_head, (cfg.vocab, cfg.d_model), cfg.pdtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def _embed(params, batch, cfg: ModelConfig,
+           repro_embed: Optional[ReproSpec] = None):
+    if cfg.embed_frontend == "stub" and "embeds" in batch:
+        x = batch["embeds"].astype(cfg.cdtype)
+    else:
+        x = common.embed_lookup(params["embed"], batch["tokens"],
+                                repro_embed).astype(cfg.cdtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+    return x
+
+
+def _positions(batch, cfg: ModelConfig, S: int, B: int):
+    if "positions" in batch:
+        return batch["positions"]
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+
+def _head_table(params, cfg: ModelConfig):
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(params, batch, cfg: ModelConfig, caches=None,
+            train: bool = False, remat_policy: str = "nothing",
+            repro_embed: Optional[ReproSpec] = None):
+    """Returns (hidden (B,S,D), new_caches, aux_loss)."""
+    x = _embed(params, batch, cfg, repro_embed)
+    B, S = x.shape[:2]
+    positions = _positions(batch, cfg, S, B)
+    x, caches, aux = transformer.run_stack(
+        params["blocks"], x, positions, cfg, caches=caches, train=train,
+        remat_policy=remat_policy)
+    x = common.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, remat_policy: str = "nothing",
+            repro_embed: Optional[ReproSpec] = None, xent_chunk: int = 512):
+    """batch: tokens/embeds (B, S), targets (B, S) (-1 = masked)."""
+    hidden, _, aux = forward(params, batch, cfg, train=True,
+                             remat_policy=remat_policy,
+                             repro_embed=repro_embed)
+    xent = common.chunked_xent(hidden, _head_table(params, cfg),
+                               batch["targets"], cfg, chunk=xent_chunk)
+    loss = xent + aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+def logits_at(hidden, params, cfg: ModelConfig):
+    """Logits of given hidden states (used for the last position / decode)."""
+    table = _head_table(params, cfg).astype(cfg.cdtype)
+    logits = (hidden.astype(cfg.cdtype) @ table.T).astype(jnp.float32)
+    if cfg.softcap_final:
+        logits = common.softcap(logits, cfg.softcap_final)
+    if cfg.logit_scale:
+        logits = logits * cfg.logit_scale
+    return logits
+
+
+def prefill_step(params, batch, cfg: ModelConfig, max_seq: int):
+    """Prefill: run the prompt, fill caches, return last-position logits."""
+    if cfg.embed_frontend == "stub" and "embeds" in batch:
+        B, S = batch["embeds"].shape[:2]
+    else:
+        B, S = batch["tokens"].shape
+    caches = transformer.stack_cache_init(B, max_seq, cfg)
+    hidden, caches, _ = forward(params, batch, cfg, caches=caches)
+    return logits_at(hidden[:, -1:, :], params, cfg), caches
+
+
+def decode_step(params, caches, batch, cfg: ModelConfig):
+    """One decode step.  batch: tokens (B, 1) [or embeds (B,1,D)] +
+    positions (B, 1) (or (B, 3, 1) for mrope).  Returns (logits, caches)."""
+    hidden, caches, _ = forward(params, batch, cfg, caches=caches)
+    return logits_at(hidden, params, cfg), caches

@@ -1,0 +1,92 @@
+"""Mixture-of-Experts FFN with grouped top-k capacity dispatch.
+
+GShard-style dispatch with one crucial twist for reproducibility: capacity
+and slot assignment are computed within fixed-size *token groups that never
+cross sequence boundaries*, so the token->slot mapping is a pure function of
+the sequence content — independent of how sequences are sharded across the
+data axes (DESIGN.md §6).  A global capacity pool would couple the dropping
+pattern to the mesh width and silently break bitwise mesh invariance.
+
+Expert weights are stacked (E, ...) and sharded over the ``model`` axis
+(expert parallelism); XLA inserts the all-to-alls from the shardings.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+
+def moe_init(key, cfg: ModelConfig):
+    mo = cfg.moe
+    D, F, E = cfg.d_model, mo.d_ff_expert, mo.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": common.dense_init(ks[0], (D, E), jnp.float32),
+        "w_gate": common.dense_init(ks[1], (E, D, F), cfg.pdtype),
+        "w_up": common.dense_init(ks[2], (E, D, F), cfg.pdtype),
+        "w_down": common.dense_init(ks[3], (E, F, D), cfg.pdtype),
+    }
+
+
+def group_capacity(group: int, cfg: ModelConfig) -> int:
+    mo = cfg.moe
+    cap = math.ceil(group * mo.top_k * mo.capacity_factor / mo.num_experts)
+    return max(mo.top_k, min(cap, group))
+
+
+def moe_block(x, p, cfg: ModelConfig, group: int = 1024
+              ) -> Tuple[jax.Array, dict]:
+    """x: (B, S, D) -> (out (B, S, D), aux-loss dict)."""
+    B, S, D = x.shape
+    mo = cfg.moe
+    E, K = mo.num_experts, mo.top_k
+    cd = cfg.cdtype
+    g = min(group, S)
+    assert S % g == 0, "dispatch groups must not cross sequences"
+    C = group_capacity(g, cfg)
+    N = B * (S // g)
+    xg = x.reshape(N, g, D)
+
+    logits = (xg @ p["router"].astype(cd)).astype(jnp.float32)   # (N, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)                         # (N, g, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # slot assignment: cumulative per-expert counts over (k-slot, token) order
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)           # (N, g, K, E)
+    flat = onehot.swapaxes(1, 2).reshape(N, K * g, E)            # k-major
+    pos = jnp.cumsum(flat, axis=1) - flat                        # (N, K*g, E)
+    pos = pos.reshape(N, K, g, E).swapaxes(1, 2)                 # (N, g, K, E)
+    slot = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)      # (N, g, K)
+    keep = (slot < C) & (gates > 0)
+
+    slot_oh = jax.nn.one_hot(slot, C, dtype=jnp.float32)         # (N,g,K,C)
+    combine = jnp.einsum("ngk,ngke,ngkc->ngec",
+                         gates * keep.astype(jnp.float32), onehot, slot_oh)
+    dispatch = (combine > 0).astype(cd)                          # (N, g, E, C)
+
+    expert_in = jnp.einsum("ngec,ngd->necd", dispatch, x.reshape(N, g, D)
+                           .astype(cd))                          # (N, E, C, D)
+    h_g = jnp.einsum("necd,edf->necf", expert_in, p["w_gate"].astype(cd))
+    h_u = jnp.einsum("necd,edf->necf", expert_in, p["w_up"].astype(cd))
+    act = jax.nn.silu(h_g) if cfg.act == "silu" else jax.nn.gelu(h_g)
+    expert_out = jnp.einsum("necf,efd->necd", act * h_u,
+                            p["w_down"].astype(cd))              # (N, E, C, D)
+    out = jnp.einsum("ngec,necd->ngd", combine.astype(cd), expert_out)
+
+    # auxiliary losses (float32; reproducible per group, summed canonically)
+    me = probs.mean(axis=1)                                      # (N, E)
+    ce = onehot.sum(axis=2).mean(axis=1)                         # (N, E) frac
+    load_balance = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {
+        "moe_load_balance": mo.load_balance_coef * load_balance,
+        "moe_z_loss": mo.router_z_coef * z_loss,
+    }
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,46 @@
+"""Time-chunked recurrent scan with gradient checkpointing.
+
+A plain ``lax.scan`` over S timesteps stores every carried state for the
+backward pass — for mLSTM's (B, H, hd, hd) matrix memory that is S x 1 MB
+of residuals per block (the dominant memory-roofline term on the xlstm and
+hymba train cells; EXPERIMENTS.md §Perf).  Scanning over chunks with a
+``jax.checkpoint`` inner scan stores only per-chunk boundary states and
+recomputes inside the chunk: residual traffic drops ~chunk_size x for a
+~2x flop recompute on the (cheap, element-wise) recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+TIME_CHUNK = 64
+
+
+def chunked_time_scan(step, state0, xs, chunk: int = TIME_CHUNK):
+    """scan(step, state0, xs) with checkpointed time chunks.
+
+    xs: pytree with leading time axis S; returns (final_state, ys) with ys
+    stacked exactly like lax.scan's.
+    """
+    leaves = jax.tree.leaves(xs)
+    S = leaves[0].shape[0]
+    if S <= chunk:
+        return lax.scan(step, state0, xs)
+    nc, rem = divmod(S, chunk)
+    xs_main = jax.tree.map(
+        lambda x: x[:nc * chunk].reshape(nc, chunk, *x.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(st, xc):
+        return lax.scan(step, st, xc)
+
+    st, ys = lax.scan(chunk_body, state0, xs_main)
+    ys = jax.tree.map(lambda y: y.reshape(nc * chunk, *y.shape[2:]), ys)
+    if rem:
+        # exact remainder pass (padding would corrupt the final carry)
+        st, ys_tail = lax.scan(
+            step, st, jax.tree.map(lambda x: x[nc * chunk:], xs))
+        ys = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), ys, ys_tail)
+    return st, ys

@@ -1,0 +1,90 @@
+"""Mamba-style selective SSM head (for the hymba hybrid architecture).
+
+Hymba runs attention heads and SSM heads *in parallel* within each block and
+fuses their (normalized) outputs.  We implement a selective state-space scan:
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+with per-channel A < 0 and input-dependent (B_t, C_t, dt_t).  Train/prefill
+scan over time; decode updates the O(d_inner * state_dim) recurrent state —
+this is what makes hymba's long_500k cell sub-quadratic.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common
+from repro.models.config import ModelConfig
+from repro.models.recurrence import chunked_time_scan
+
+
+class SSMState(NamedTuple):
+    h: jax.Array            # (B, d_inner, state) float32
+
+
+def ssm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    n = cfg.ssm.state_dim
+    di = cfg.ssm.expand * d
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": common.dense_init(ks[0], (d, di), cfg.pdtype),
+        "w_bcdt": common.dense_init(ks[1], (di, 2 * n + 1), cfg.pdtype),
+        "a_log": jnp.zeros((di,), cfg.pdtype),            # A = -exp(a_log)
+        "d_skip": jnp.ones((di,), cfg.pdtype),
+        "dt_bias": jnp.full((), -4.6, cfg.pdtype),        # softplus ~ 0.01
+        "w_out": common.dense_init(ks[2], (di, d), cfg.pdtype),
+        "out_norm": common.rmsnorm_init(di, cfg.pdtype),
+    }
+
+
+def ssm_block(x, p, cfg: ModelConfig, state: Optional[SSMState] = None):
+    """x: (B, S, D) -> (out (B, S, D), new_state).
+
+    If ``state`` is given and S == 1, performs one recurrent decode step."""
+    B, S, D = x.shape
+    cd = cfg.cdtype
+    n = cfg.ssm.state_dim
+    x_in = jax.nn.silu(x @ p["w_in"].astype(cd))          # (B, S, di)
+    di = x_in.shape[-1]
+
+    bcdt = x_in @ p["w_bcdt"].astype(cd)                  # (B, S, 2n+1)
+    Bm = bcdt[..., :n].astype(jnp.float32)                # (B, S, n)
+    Cm = bcdt[..., n:2 * n].astype(jnp.float32)           # (B, S, n)
+    dt = jax.nn.softplus(bcdt[..., 2 * n].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B, S)
+
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))          # (di,)
+    xf = x_in.astype(jnp.float32)
+    decay = jnp.exp(dt[..., None] * A[None, None, :])     # (B, S, di)
+    drive = (dt[..., None] * xf)[..., None] * Bm[:, :, None, :]  # (B,S,di,n)
+
+    if state is not None and S == 1:
+        h = state.h * decay[:, 0, :, None] + drive[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None, :]
+        new_state = SSMState(h=h)
+    else:
+        def step(h, xs):
+            dec, drv = xs                                  # (B,di),(B,di,n)
+            h = h * dec[..., None] + drv
+            return h, h
+
+        h0 = jnp.zeros((B, di, n), jnp.float32) if state is None else state.h
+        hT, hs = chunked_time_scan(step, h0, (decay.swapaxes(0, 1),
+                                              drive.swapaxes(0, 1)))
+        y = jnp.einsum("sbdn,bsn->bsd", hs, Cm)
+        new_state = SSMState(h=hT)
+
+    y = y + xf * p["d_skip"].astype(jnp.float32)
+    y = common.rmsnorm(y.astype(cd), p["out_norm"], cfg.norm_eps)
+    return y @ p["w_out"].astype(cd), new_state
+
+
+def ssm_state_init(batch, cfg: ModelConfig):
+    return SSMState(h=jnp.zeros((batch, cfg.ssm.expand * cfg.d_model,
+                                 cfg.ssm.state_dim), jnp.float32))

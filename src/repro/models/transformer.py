@@ -1,0 +1,216 @@
+"""Block assembly + scan-over-layers stacks for all architecture families.
+
+One *scan unit* is the structure repeated down the stack:
+
+* dense/moe/audio/vlm : 1 transformer layer (attention + [MoE-]FFN)
+* gemma2 alternating  : 2 layers (sliding-window attn layer + full-attn layer)
+* hymba hybrid        : 1 layer with parallel attention + SSM heads
+* xlstm               : 2 blocks (mLSTM + sLSTM)
+
+Layer weights are stacked on a leading (n_units,) axis and consumed by
+``lax.scan`` — compile time is O(1) in depth, which is what makes the 80-layer
+dry-runs tractable.  Training wraps the unit in ``jax.checkpoint`` (remat).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention, common, moe, ssm, xlstm
+from repro.models.config import ModelConfig
+
+
+def layers_per_unit(cfg: ModelConfig) -> int:
+    if cfg.family == "xlstm" or cfg.attn_kind == "alternating":
+        return 2
+    return 1
+
+
+def n_units(cfg: ModelConfig) -> int:
+    lpu = layers_per_unit(cfg)
+    assert cfg.n_layers % lpu == 0, (cfg.n_layers, lpu)
+    return cfg.n_layers // lpu
+
+
+# ---------------------------------------------------------------------------
+# unit init
+# ---------------------------------------------------------------------------
+
+def _dense_layer_init(key, cfg: ModelConfig, window: bool):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln_attn": common.rmsnorm_init(cfg.d_model, cfg.pdtype),
+        "attn": attention.attn_init(ks[0], cfg, window),
+        "ln_ffn": common.rmsnorm_init(cfg.d_model, cfg.pdtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = common.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype)
+    if cfg.post_block_norm:
+        p["post_attn"] = common.rmsnorm_init(cfg.d_model, cfg.pdtype)
+        p["post_ffn"] = common.rmsnorm_init(cfg.d_model, cfg.pdtype)
+    return p
+
+
+def _hymba_layer_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln_mix": common.rmsnorm_init(cfg.d_model, cfg.pdtype),
+        "attn": attention.attn_init(ks[0], cfg, window=True),
+        "ssm": ssm.ssm_init(ks[1], cfg),
+        "ln_ffn": common.rmsnorm_init(cfg.d_model, cfg.pdtype),
+        "mlp": common.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.pdtype),
+    }
+
+
+def unit_init(key, cfg: ModelConfig):
+    if cfg.family == "xlstm":
+        k1, k2 = jax.random.split(key)
+        return {"mlstm": xlstm.mlstm_init(k1, cfg),
+                "slstm": xlstm.slstm_init(k2, cfg)}
+    if cfg.family == "hybrid":
+        return _hymba_layer_init(key, cfg)
+    if cfg.attn_kind == "alternating":
+        k1, k2 = jax.random.split(key)
+        return {"local": _dense_layer_init(k1, cfg, window=True),
+                "global": _dense_layer_init(k2, cfg, window=False)}
+    return _dense_layer_init(key, cfg, window=cfg.attn_kind == "sliding")
+
+
+def stack_init(key, cfg: ModelConfig):
+    keys = jax.random.split(key, n_units(cfg))
+    return jax.vmap(lambda k: unit_init(k, cfg))(keys)
+
+
+# ---------------------------------------------------------------------------
+# caches / recurrent state per unit
+# ---------------------------------------------------------------------------
+
+def unit_cache_init(batch: int, max_seq: int, cfg: ModelConfig):
+    """Decode-time state for one unit (None entries where stateless)."""
+    if cfg.family == "xlstm":
+        return {"mlstm": xlstm.mlstm_state_init(batch, cfg),
+                "slstm": xlstm.slstm_state_init(batch, cfg)}
+    if cfg.family == "hybrid":
+        return {"attn": attention.cache_init(
+                    batch, min(cfg.window, max_seq), cfg),
+                "ssm": ssm.ssm_state_init(batch, cfg)}
+    if cfg.attn_kind == "alternating":
+        return {"local": attention.cache_init(
+                    batch, min(cfg.window, max_seq), cfg),
+                "global": attention.cache_init(batch, max_seq, cfg)}
+    slots = min(cfg.window, max_seq) if cfg.attn_kind == "sliding" else max_seq
+    return {"attn": attention.cache_init(batch, slots, cfg)}
+
+
+def stack_cache_init(batch: int, max_seq: int, cfg: ModelConfig):
+    unit = unit_cache_init(batch, max_seq, cfg)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_units(cfg), *x.shape)), unit)
+
+
+# ---------------------------------------------------------------------------
+# unit apply
+# ---------------------------------------------------------------------------
+
+def _dense_layer_apply(x, p, cfg: ModelConfig, positions, cache,
+                       window: int):
+    h = common.rmsnorm(x, p["ln_attn"], cfg.norm_eps)
+    out, cache = attention.attention_block(h, p["attn"], cfg, positions,
+                                           window=window, cache=cache)
+    if cfg.post_block_norm:
+        out = common.rmsnorm(out, p["post_attn"], cfg.norm_eps)
+    x = x + out
+    h = common.rmsnorm(x, p["ln_ffn"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        out, aux_d = moe.moe_block(h, p["moe"], cfg, group=min(
+            cfg.moe_group, h.shape[1]))
+        aux = sum(aux_d.values())
+    else:
+        out = common.mlp(h, p["mlp"], cfg.act, cfg.cdtype)
+    if cfg.post_block_norm:
+        out = common.rmsnorm(out, p["post_ffn"], cfg.norm_eps)
+    return x + out, cache, aux
+
+
+def _hymba_layer_apply(x, p, cfg: ModelConfig, positions, cache):
+    h = common.rmsnorm(x, p["ln_mix"], cfg.norm_eps)
+    attn_cache = cache["attn"] if cache is not None else None
+    ssm_state = cache["ssm"] if cache is not None else None
+    a_out, attn_cache = attention.attention_block(
+        h, p["attn"], cfg, positions, window=cfg.window, cache=attn_cache)
+    s_out, ssm_state = ssm.ssm_block(h, p["ssm"], cfg, state=ssm_state)
+    x = x + 0.5 * (a_out + s_out)                   # fused parallel heads
+    h = common.rmsnorm(x, p["ln_ffn"], cfg.norm_eps)
+    x = x + common.mlp(h, p["mlp"], cfg.act, cfg.cdtype)
+    cache = (None if cache is None
+             else {"attn": attn_cache, "ssm": ssm_state})
+    return x, cache, jnp.zeros((), jnp.float32)
+
+
+def unit_apply(p, x, positions, cache, cfg: ModelConfig):
+    """Returns (x, new_cache, aux_loss_scalar)."""
+    if cfg.family == "xlstm":
+        m_st = cache["mlstm"] if cache is not None else None
+        s_st = cache["slstm"] if cache is not None else None
+        x, m_st = xlstm.mlstm_block(x, p["mlstm"], cfg, state=m_st)
+        x, s_st = xlstm.slstm_block(x, p["slstm"], cfg, state=s_st)
+        cache = None if cache is None else {"mlstm": m_st, "slstm": s_st}
+        return x, cache, jnp.zeros((), jnp.float32)
+    if cfg.family == "hybrid":
+        return _hymba_layer_apply(x, p, cfg, positions, cache)
+    if cfg.attn_kind == "alternating":
+        lc = cache["local"] if cache is not None else None
+        gc = cache["global"] if cache is not None else None
+        x, lc, a1 = _dense_layer_apply(x, p["local"], cfg, positions, lc,
+                                       window=cfg.window)
+        x, gc, a2 = _dense_layer_apply(x, p["global"], cfg, positions, gc,
+                                       window=0)
+        cache = None if cache is None else {"local": lc, "global": gc}
+        return x, cache, a1 + a2
+    window = cfg.window if cfg.attn_kind == "sliding" else 0
+    ac = cache["attn"] if cache is not None else None
+    x, ac, aux = _dense_layer_apply(x, p, cfg, positions, ac, window=window)
+    return x, (None if cache is None else {"attn": ac}), aux
+
+
+# ---------------------------------------------------------------------------
+# the scanned stack
+# ---------------------------------------------------------------------------
+
+def run_stack(stacked_params, x, positions, cfg: ModelConfig,
+              caches=None, train: bool = False,
+              remat_policy: str = "nothing"):
+    """Run all units.  caches: stacked pytree or None (train mode)."""
+
+    if caches is None:
+        def body(carry, p_unit):
+            h, aux = carry
+            h, _, a = unit_apply(p_unit, h, positions, None, cfg)
+            return (h, aux + a), None
+
+        if train:
+            policy = {
+                "nothing": jax.checkpoint_policies.nothing_saveable,
+                "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            }[remat_policy if remat_policy != "none" else "nothing"]
+            body = jax.checkpoint(body, policy=policy)
+        (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               stacked_params)
+        return x, None, aux
+
+    def body(carry, xs):
+        h, aux = carry
+        p_unit, cache_unit = xs
+        h, new_cache, a = unit_apply(p_unit, h, positions, cache_unit, cfg)
+        return (h, aux + a), new_cache
+
+    (x, aux), new_caches = lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stacked_params, caches))
+    return x, new_caches, aux

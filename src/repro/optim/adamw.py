@@ -1,0 +1,85 @@
+"""Sharded AdamW with reproducible gradient preprocessing hooks.
+
+Functional, dependency-free.  Optimizer moments follow the parameter
+shardings by default; the launcher adds ZeRO-1 data-axis sharding on top
+(see launch/shardings.py).  The update itself is elementwise, hence already
+bit-deterministic given deterministic gradients — the reproducibility work
+happens upstream in optim/grad.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    mu: dict
+    nu: dict
+    master: dict          # float32 master weights (== params when f32)
+    count: jax.Array
+
+
+def init(params) -> AdamWState:
+    zeros = lambda tree: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+    master = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    return AdamWState(mu=zeros(params), nu=zeros(params), master=master,
+                      count=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: AdamWConfig, count):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    c = count.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (c + 1.0) / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((c - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def update(grads, state: AdamWState, params, cfg: AdamWConfig,
+           grad_norm: Optional[jax.Array] = None):
+    """Returns (new_params, new_state).  ``grad_norm`` (if given) is the
+    reproducibly-computed global norm used for clipping."""
+    count = state.count + 1
+    if grad_norm is None:
+        grad_norm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(grad_norm, 1e-9))
+    lr = schedule(cfg, state.count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh, vh = m / b1c, v / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:                       # decoupled wd on matrices only
+            step = step + cfg.weight_decay * w
+        w = w - lr * step                     # f32 master update
+        return w.astype(p.dtype), m, v, w
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu, state.master)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AdamWState(mu=pick(1), nu=pick(2), master=pick(3),
+                               count=count)

@@ -1,0 +1,140 @@
+"""Reproducible gradient accumulation, reduction and clipping.
+
+This is the paper's technique doing its production job (DESIGN.md §2):
+
+* microbatch gradients (deterministic, fixed-shape quanta) are folded into
+  per-parameter ``ReproAcc`` trees — the associative ``repro`` type replaces
+  the float += of ordinary gradient accumulation;
+* cross-device reduction uses exact integer collectives (repro_psum) over
+  the data/pod axes inside shard_map;
+* the global-norm clip is computed from a reproducible sum of squares, so
+  clipping decisions can never flip between meshes.
+
+Everything here is elementwise over parameters, so TP shardings pass
+through untouched.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import accumulator as acc_mod
+from repro.core import collectives
+from repro.core.accumulator import ReproAcc
+from repro.core.types import ReproSpec
+
+
+def tree_to_acc(grads, spec: ReproSpec):
+    """Convert a gradient tree into per-parameter accumulators.
+
+    One *scalar* lattice exponent per tensor (from its max |g|): keeps the
+    accumulator overhead at exactly (k, C) ints per element and makes the
+    ZeRO-2 reduce-scatter path trivial.  A fresh single-value extraction has
+    k < 2^(W-1) << window, so C == 0 and no renorm is needed.
+    """
+    def conv(g):
+        e1 = acc_mod.required_e1(g, spec)            # scalar ()
+        k = acc_mod.extract(g.astype(spec.dtype), e1, spec)   # (*shape, L)
+        return ReproAcc(k=k, C=jnp.zeros_like(k), e1=e1)
+    return jax.tree.map(conv, grads)
+
+
+def acc_merge_tree(a, b, spec: ReproSpec):
+    return jax.tree.map(
+        lambda x, y: acc_mod.merge(x, y, spec), a, b,
+        is_leaf=lambda x: isinstance(x, ReproAcc))
+
+
+def acc_finalize_tree(accs, spec: ReproSpec):
+    return jax.tree.map(
+        lambda a: acc_mod.finalize(a, spec),
+        accs, is_leaf=lambda x: isinstance(x, ReproAcc))
+
+
+def acc_zeros_like(grads, spec: ReproSpec):
+    return jax.tree.map(lambda g: acc_mod.zeros(spec, g.shape), grads)
+
+
+def accumulate_microbatches(grad_fn: Callable, params, microbatches,
+                            spec: Optional[ReproSpec]):
+    """Scan microbatches; returns (grad_accs_or_grads, mean_metrics).
+
+    ``microbatches``: pytree of arrays with leading (n_micro, ...) axis.
+    With spec=None this is the conventional float += baseline.
+    """
+    n_micro = jax.tree.leaves(microbatches)[0].shape[0]
+
+    def one(mb):
+        return grad_fn(params, mb)                 # -> (grads, metrics)
+
+    if spec is None:
+        def body(carry, mb):
+            g_sum, m_sum = carry
+            g, m = one(mb)
+            return (jax.tree.map(jnp.add, g_sum, g),
+                    jax.tree.map(jnp.add, m_sum, m)), None
+
+        g0, m0 = jax.tree.map(
+            jnp.zeros_like,
+            jax.eval_shape(one, jax.tree.map(lambda x: x[0], microbatches)))
+        (g, m), _ = lax.scan(body, (g0, m0), microbatches)
+        # raw sums over microbatches; callers normalize by *global* counts
+        # (a local mean would depend on the DP width -> not invariant)
+        return g, m
+
+    def body(carry, mb):
+        accs, m_sum = carry
+        g, m = one(mb)
+        accs = acc_merge_tree(accs, tree_to_acc(g, spec), spec)
+        m_sum = jax.tree.map(
+            lambda a, x: acc_mod.merge(a, acc_mod.from_values(
+                x.astype(spec.dtype)[None], spec), spec), m_sum, m,
+            is_leaf=lambda x: isinstance(x, ReproAcc))
+        return (accs, m_sum), None
+
+    g_shape, m_shape = jax.eval_shape(
+        one, jax.tree.map(lambda x: x[0], microbatches))
+    accs0 = jax.tree.map(lambda s: acc_mod.zeros(spec, s.shape), g_shape)
+    m0 = jax.tree.map(lambda _s: acc_mod.zeros(spec), m_shape)
+    (accs, m), _ = lax.scan(body, (accs0, m0), microbatches)
+    return accs, m
+
+
+def reduce_grads(accs_or_grads, spec: Optional[ReproSpec], axis_names,
+                 n_quanta_global: int, packed: bool = False):
+    """Cross-device gradient reduction (inside shard_map).
+
+    Repro mode: exact integer psum of accumulator trees, then finalize and
+    normalize by the *global* quantum count (a static constant, so the
+    division is deterministic).  Baseline: float psum.
+    """
+    if spec is None:
+        g = jax.tree.map(
+            lambda x: lax.psum(x, axis_names), accs_or_grads)
+        return jax.tree.map(lambda x: x / n_quanta_global, g)
+    fn = collectives.repro_psum_packed if packed else collectives.repro_psum
+    accs = jax.tree.map(
+        lambda a: fn(a, spec, axis_names), accs_or_grads,
+        is_leaf=lambda x: isinstance(x, ReproAcc))
+    g = acc_finalize_tree(accs, spec)
+    return jax.tree.map(lambda x: x / n_quanta_global, g)
+
+
+def repro_global_norm(grads, spec: Optional[ReproSpec]):
+    """sqrt of a reproducible sum of squared gradient entries.
+
+    Squares are deterministic per element; their sum uses the associative
+    accumulator, so the clip decision is mesh/ordering independent.
+    """
+    if spec is None:
+        return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                            for g in jax.tree.leaves(grads)))
+    acc = acc_mod.zeros(spec)
+    for g in jax.tree.leaves(grads):
+        sq = jnp.square(g.astype(spec.dtype)).reshape(-1)
+        acc = acc_mod.merge(acc, acc_mod.from_values(sq, spec), spec)
+    return jnp.sqrt(acc_mod.finalize(acc, spec))

@@ -1,0 +1,74 @@
+"""Failure handling: a supervisor loop with checkpoint/restart semantics.
+
+Models the production control flow: run attempts; on failure restore the
+last complete checkpoint and continue.  Because the training step is
+bit-deterministic (repro accumulation + deterministic data quanta), a
+restart replays the *exact* trajectory — asserted in the integration tests,
+and the property that makes redundant/speculative execution safe at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Optional
+
+log = logging.getLogger(__name__)
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by fault-injection hooks in tests."""
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    max_restarts: int = 10
+    backoff_s: float = 0.0         # real clusters: exponential backoff
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    restarts: int
+    completed_steps: int
+    failures: list
+
+
+def run_supervised(make_state: Callable[[], object],
+                   restore_state: Callable[[], Optional[object]],
+                   step_fn: Callable[[object, int], object],
+                   save_state: Callable[[object, int], None],
+                   total_steps: int,
+                   ckpt_every: int,
+                   cfg: SupervisorConfig = SupervisorConfig()
+                   ) -> SupervisorReport:
+    """Generic supervised training loop.
+
+    * make_state():            fresh state (step 0)
+    * restore_state():         latest checkpointed (state) or None
+    * step_fn(state, step):    one training step -> new state (may raise)
+    * save_state(state, step): checkpoint
+    """
+    failures = []
+    restarts = 0
+    while True:
+        restored = restore_state()
+        state = restored if restored is not None else make_state()
+        step = getattr(state, "step", 0)
+        try:
+            while step < total_steps:
+                state = step_fn(state, step)
+                step += 1
+                if step % ckpt_every == 0 or step == total_steps:
+                    save_state(state, step)
+            return SupervisorReport(restarts=restarts,
+                                    completed_steps=step,
+                                    failures=failures)
+        except SimulatedFailure as e:      # pragma: no cover - thin branch
+            failures.append((step, repr(e)))
+            restarts += 1
+            log.warning("failure at step %d (%s); restart %d",
+                        step, e, restarts)
+            if restarts > cfg.max_restarts:
+                raise
+            if cfg.backoff_s:
+                time.sleep(cfg.backoff_s)

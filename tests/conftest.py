@@ -1,0 +1,11 @@
+"""Test configuration.
+
+Enables x64 so float64 accumulator paths (paper's double-precision results)
+are testable on CPU.  The library itself never requires x64 — the TPU
+production path is float32 — and we do NOT set
+--xla_force_host_platform_device_count here: smoke tests and benches must see
+1 device; only launch/dryrun.py requests 512 placeholder devices.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,141 @@
+"""Unit tests for the canonical reproducible accumulator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accumulator as acc_mod
+from repro.core import eft
+from repro.core.types import ReproSpec
+
+SPECS = [
+    ReproSpec(dtype=jnp.float32, L=1),
+    ReproSpec(dtype=jnp.float32, L=2),
+    ReproSpec(dtype=jnp.float32, L=3),
+    ReproSpec(dtype=jnp.float64, L=2),
+    ReproSpec(dtype=jnp.float32, L=2, W=12),
+]
+
+
+def _rand(n, seed=0, scale=1.0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_sum_accuracy(spec):
+    x = _rand(4096, seed=1, dtype=np.dtype(spec.dtype))
+    got = acc_mod.finalize(acc_mod.from_values(x, spec), spec)
+    want = np.sum(x.astype(np.float64))
+    # paper Eq. 6 error bound: n * 2^((1-L)W - 1) * max|b|
+    bound = len(x) * 2.0 ** ((1 - spec.L) * spec.W - 1) * np.max(np.abs(x))
+    bound = max(bound, 64 * np.finfo(np.dtype(spec.dtype)).eps * np.sum(np.abs(x)))
+    assert abs(float(got) - want) <= bound
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_permutation_invariance_bitwise(spec):
+    x = _rand(2048, seed=2, scale=100.0, dtype=np.dtype(spec.dtype))
+    rng = np.random.default_rng(3)
+    ref = acc_mod.finalize(acc_mod.from_values(x, spec), spec)
+    for _ in range(3):
+        perm = rng.permutation(len(x))
+        got = acc_mod.finalize(acc_mod.from_values(x[perm], spec), spec)
+        assert np.asarray(got).tobytes() == np.asarray(ref).tobytes()
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_split_merge_invariance_bitwise(spec):
+    """Any regrouping (data-parallel split) gives identical bits."""
+    x = _rand(3000, seed=4, scale=1e3, dtype=np.dtype(spec.dtype))
+    ref = acc_mod.from_values(x, spec)
+    for nsplit in (2, 3, 7):
+        parts = np.array_split(x, nsplit)
+        acc = acc_mod.zeros(spec)
+        for p in parts:
+            acc = acc_mod.merge(acc, acc_mod.from_values(p, spec), spec)
+        for a, b in zip(acc, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_merge_order_invariance(spec):
+    x = _rand(1024, seed=5, scale=1e-3, dtype=np.dtype(spec.dtype))
+    parts = [acc_mod.from_values(p, spec) for p in np.array_split(x, 4)]
+    a = acc_mod.merge(acc_mod.merge(parts[0], parts[1], spec),
+                      acc_mod.merge(parts[2], parts[3], spec), spec)
+    b = parts[3]
+    for p in (parts[1], parts[0], parts[2]):
+        b = acc_mod.merge(b, p, spec)
+    for x_, y_ in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x_), np.asarray(y_))
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_mixed_magnitudes_demotion(spec):
+    """Huge value arriving late forces demotion; order must not matter."""
+    dt = np.dtype(spec.dtype)
+    small = _rand(512, seed=6, scale=1e-6, dtype=dt)
+    big = np.array([1e12, -3e11], dtype=dt)
+    x = np.concatenate([small, big])
+    fwd = acc_mod.finalize(acc_mod.from_values(x, spec), spec)
+    rev = acc_mod.finalize(acc_mod.from_values(x[::-1].copy(), spec), spec)
+    assert np.asarray(fwd).tobytes() == np.asarray(rev).tobytes()
+    # streaming: small first, then big (demote mid-stream)
+    acc = acc_mod.from_values(small, spec)
+    acc = acc_mod.add_values(acc, big, spec)
+    got = acc_mod.finalize(acc, spec)
+    assert np.asarray(got).tobytes() == np.asarray(fwd).tobytes()
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_window_invariant(spec):
+    x = _rand(8192, seed=7, scale=3.14, dtype=np.dtype(spec.dtype))
+    acc = acc_mod.from_values(x, spec)
+    assert np.all(np.asarray(acc.k) >= 0)
+    assert np.all(np.asarray(acc.k) < spec.window_ulps)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_paper_state_roundtrip(spec):
+    x = _rand(1000, seed=8, dtype=np.dtype(spec.dtype))
+    acc = acc_mod.from_values(x, spec)
+    S, C = acc_mod.to_paper_state(acc, spec)
+    # S must lie in the paper's window [1.5 ufp, 1.75 ufp)
+    ufps = np.asarray(eft.ufp(S))
+    s_np = np.asarray(S)
+    assert np.all(s_np >= 1.5 * ufps) and np.all(s_np < 1.75 * ufps)
+    back = acc_mod.from_paper_state(S, C, acc.e1, spec)
+    for a, b in zip(back, acc):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_batched_axis_sum():
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    x = _rand(64 * 32, seed=9).reshape(64, 32)
+    acc = acc_mod.from_values(x, spec, axis=1)
+    out = acc_mod.finalize(acc, spec)
+    assert out.shape == (64,)
+    # paper Eq. 6 bound is *absolute* (n * 2^((1-L)W - 1) * max|b|)
+    atol = 32 * 2.0 ** ((1 - spec.L) * spec.W - 1) * float(np.abs(x).max())
+    np.testing.assert_allclose(np.asarray(out), x.astype(np.float64).sum(1),
+                               atol=atol, rtol=0)
+
+
+def test_zeros_identity():
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    x = _rand(100, seed=10)
+    a = acc_mod.from_values(x, spec)
+    z = acc_mod.zeros(spec)
+    m = acc_mod.merge(a, z, spec)
+    for p, q in zip(m, a):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(q))
+    assert float(acc_mod.finalize(z, spec)) == 0.0
+
+
+def test_jit_and_grad_compatible():
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    x = jnp.asarray(_rand(256, seed=11))
+    f = jax.jit(lambda v: acc_mod.finalize(acc_mod.from_values(v, spec), spec))
+    eager = acc_mod.finalize(acc_mod.from_values(x, spec), spec)
+    assert np.asarray(f(x)).tobytes() == np.asarray(eager).tobytes()

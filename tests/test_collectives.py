@@ -1,0 +1,58 @@
+"""Mesh-shape invariance of reproducible collectives.
+
+The paper's claim, transplanted: the *physical* distribution of the data
+(thread count there, device count here) must not change a single bit of the
+aggregate.  We spawn subprocesses with different forced host-device counts
+and assert the reduced bits are identical.
+"""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accumulator as acc_mod
+from repro.core import collectives
+from repro.core.types import ReproSpec
+
+HERE = os.path.dirname(__file__)
+SCRIPT = os.path.join(HERE, "_mesh_invariance_check.py")
+
+
+def _run(ndev, packed=False):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    args = [sys.executable, SCRIPT, str(ndev)] + (["packed"] if packed else [])
+    out = subprocess.run(args, capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout.strip().splitlines()[-1]
+
+
+@pytest.mark.slow
+def test_device_count_invariance_bitwise():
+    results = {n: _run(n) for n in (1, 4, 8)}
+    assert results[1] == results[4] == results[8]
+
+
+@pytest.mark.slow
+def test_packed_wire_format_matches_baseline():
+    assert _run(4) == _run(4, packed=True)
+
+
+def test_pack_unpack_roundtrip():
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((64, 33)).astype(np.float32)
+    acc = acc_mod.from_values(x, spec, axis=1)
+    word, e1 = collectives.pack_acc(acc, spec)
+    back = collectives.unpack_acc(word, e1, spec)
+    for a, b in zip(back, acc):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_max_axis_size_bounds():
+    assert collectives.max_axis_size(ReproSpec(dtype=jnp.float32, L=2)) == 1024
+    assert collectives.max_axis_size(ReproSpec(dtype=jnp.float64, L=2)) == 8192

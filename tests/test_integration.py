@@ -1,0 +1,183 @@
+"""Integration tests: the full system behaving like a production framework.
+
+* checkpoint save/restore roundtrip (atomic, verified, mesh-agnostic)
+* failure injection -> supervised restart -> bitwise trajectory continuity
+* DP-width invariance of the FULL train step (subprocess, 1 vs 2 vs 4 dev)
+* grad-mode equivalence: repro and repro_zero2 produce identical bits
+* data-pipeline determinism and elastic re-sharding
+* straggler monitor policy
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs as registry
+from repro.checkpoint import ckpt as ckpt_mod
+from repro.data.pipeline import DataConfig, DataPipeline, synth_batch
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import train_loop
+from repro.launch.train_step import TrainConfig
+from repro.models.config import ShapeConfig
+from repro.optim import adamw as adamw_mod
+from repro.runtime.stragglers import (StragglerConfig, StragglerMonitor,
+                                      rebalance_quanta)
+
+HERE = os.path.dirname(__file__)
+
+
+def _tc(grad_mode="repro", steps=4):
+    return TrainConfig(grad_mode=grad_mode, mb_size=1,
+                       adamw=adamw_mod.AdamWConfig(
+                           lr=1e-3, warmup_steps=1, total_steps=steps))
+
+
+def _shape(steps=4):
+    return ShapeConfig("t", seq_len=32, global_batch=4, kind="train")
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": {"c": np.ones(5, np.int32)}}
+    d = str(tmp_path)
+    ckpt_mod.save(d, 3, tree, extra={"step": 3})
+    out, extra = ckpt_mod.restore(d, tree)
+    assert extra["step"] == 3
+    np.testing.assert_array_equal(np.asarray(out["a"]), tree["a"])
+    np.testing.assert_array_equal(np.asarray(out["b"]["c"]), tree["b"]["c"])
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    d = str(tmp_path)
+    ckpt_mod.save(d, 1, {"x": np.ones(4)}, extra={})
+    path = os.path.join(d, "step_00000001", "arrays.npz")
+    with open(path, "r+b") as f:
+        f.seek(30)
+        f.write(b"\xde\xad")
+    with pytest.raises(IOError):
+        ckpt_mod.restore(d, {"x": np.ones(4)})
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    d = str(tmp_path)
+    for s in range(6):
+        ckpt_mod.save(d, s, {"x": np.full(2, s)}, extra={}, keep=2)
+    assert ckpt_mod.latest_step(d) == 5
+    steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert len(steps) == 2
+
+
+def test_failure_restart_bitwise_continuity(tmp_path):
+    """A crash + restore must replay the exact trajectory."""
+    cfg = registry.get_config("smollm-135m").reduced()
+    shape, steps = _shape(), 8
+    mesh = make_host_mesh(1, 1)
+    clean = train_loop(cfg, shape, _tc(steps=steps), mesh, steps=steps,
+                       seed=3, log_every=10**9)
+    d = str(tmp_path / "ckpt")
+    failed = train_loop(cfg, shape, _tc(steps=steps), mesh, steps=steps,
+                        seed=3, ckpt_dir=d, ckpt_every=4, resume=True,
+                        fail_at=6, log_every=10**9)
+    # the failed run re-executes steps 4,5 after restoring the step-4 ckpt
+    clean_map = dict(clean)
+    for step, loss in failed:
+        assert np.float64(loss).tobytes() == \
+            np.float64(clean_map[step]).tobytes(), step
+
+
+def test_grad_modes_bitwise_equal():
+    """repro (all-reduce at end) and repro_zero2 (per-mb reduce-scatter)
+    regroup the same exact integer sums -> identical trajectories."""
+    cfg = registry.get_config("smollm-135m").reduced()
+    shape, steps = _shape(), 3
+    mesh = make_host_mesh(1, 1)
+    a = train_loop(cfg, shape, _tc("repro", steps), mesh, steps=steps,
+                   seed=11, log_every=10**9)
+    b = train_loop(cfg, shape, _tc("repro_zero2", steps), mesh, steps=steps,
+                   seed=11, log_every=10**9)
+    for (s1, l1), (s2, l2) in zip(a, b):
+        assert np.float64(l1).tobytes() == np.float64(l2).tobytes(), (s1, l1, l2)
+
+
+def _run_invariance(ndev, grad_mode):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_train_invariance_check.py"),
+         str(ndev), grad_mode],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return [l for l in out.stdout.splitlines() if l.startswith("LOSSES")][-1]
+
+
+@pytest.mark.slow
+def test_train_step_dp_width_invariance():
+    """THE paper claim, end to end: changing the data-parallel width must
+    not change a single bit of the training trajectory."""
+    h1 = _run_invariance(1, "repro_zero2")
+    h2 = _run_invariance(2, "repro_zero2")
+    h4 = _run_invariance(4, "repro_zero2")
+    assert h1 == h2 == h4
+
+
+@pytest.mark.slow
+def test_baseline_is_mesh_dependent_or_not():
+    """The float baseline carries no invariance guarantee; this documents
+    its behaviour (it may or may not differ — we only require the repro
+    modes to be invariant, which the test above asserts)."""
+    h1 = _run_invariance(1, "baseline")
+    h2 = _run_invariance(2, "baseline")
+    # no assertion on equality — just completion
+    assert h1 and h2
+
+
+def test_data_pipeline_elastic_resharding():
+    dcfg = DataConfig(seed=5, global_batch=8, seq_len=16, vocab=100)
+    one = DataPipeline(dcfg, shard=0, num_shards=1)
+    b_full = one.next_batch()
+    shards = [DataPipeline(dcfg, shard=i, num_shards=4) for i in range(4)]
+    parts = [p.next_batch() for p in shards]
+    merged = np.concatenate([np.asarray(p["tokens"]) for p in parts])
+    np.testing.assert_array_equal(np.asarray(b_full["tokens"]), merged)
+
+
+def test_data_pipeline_state_roundtrip():
+    dcfg = DataConfig(seed=6, global_batch=4, seq_len=8, vocab=50)
+    p = DataPipeline(dcfg)
+    p.next_batch()
+    p.next_batch()
+    state = p.state.to_dict()
+    q = DataPipeline(dcfg, state=type(p.state).from_dict(state))
+    np.testing.assert_array_equal(np.asarray(p.next_batch()["tokens"]),
+                                  np.asarray(q.next_batch()["tokens"]))
+
+
+def test_straggler_monitor_and_rebalance():
+    hosts = [f"h{i}" for i in range(4)]
+    mon = StragglerMonitor(hosts, StragglerConfig(patience=2))
+    actions = {}
+    for _ in range(4):
+        times = {"h0": 1.0, "h1": 1.0, "h2": 1.0, "h3": 2.0}
+        actions = mon.record_step(times)
+    assert actions.get("h3") == "rebalance"
+    assignment = {h: 4 for h in hosts}
+    new = rebalance_quanta(assignment, ["h3"])
+    assert new["h3"] == 3 and sum(new.values()) == 16
+    # persistent extreme straggler -> evict
+    mon2 = StragglerMonitor(hosts, StragglerConfig(patience=2))
+    for _ in range(4):
+        actions = mon2.record_step(
+            {"h0": 1.0, "h1": 1.0, "h2": 1.0, "h3": 10.0})
+    assert actions.get("h3") == "evict"
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path)
+    cp = ckpt_mod.AsyncCheckpointer(d, keep=2)
+    fut = cp.save(1, {"x": np.arange(3)}, extra={"step": 1})
+    fut.result()
+    cp.wait()
+    assert ckpt_mod.latest_step(d) == 1

@@ -1,0 +1,101 @@
+"""Per-kernel validation: shape/config sweeps vs the pure-jnp oracles.
+
+Kernels run in interpret mode on CPU (the kernel body executes exactly as
+written); agreement with the oracle must be bitwise because both sides do
+only exact integer arithmetic after extraction.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accumulator as acc_mod
+from repro.core.types import ReproSpec
+from repro.kernels.rsum import ops as rsum_ops
+from repro.kernels.rsum import ref as rsum_ref
+from repro.kernels.segment_rsum import ops as seg_ops
+from repro.kernels.segment_rsum import ref as seg_ref
+
+SPECS = [
+    ReproSpec(dtype=jnp.float32, L=1),
+    ReproSpec(dtype=jnp.float32, L=2),
+    ReproSpec(dtype=jnp.float32, L=3),
+    ReproSpec(dtype=jnp.float32, L=2, W=12),
+]
+
+
+def _rand(n, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+@pytest.mark.parametrize("n", [1, 127, 128, 8192, 100_000])
+def test_rsum_kernel_matches_oracle(spec, n):
+    x = _rand(n, seed=n, scale=7.0)
+    got = rsum_ops.rsum_acc(x, spec, interpret=True)
+    want = rsum_ref.rsum_acc_ref(x, spec)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    gf = float(acc_mod.finalize(got, spec))
+    wf = float(acc_mod.finalize(want, spec))
+    assert np.float32(gf).tobytes() == np.float32(wf).tobytes()
+
+
+@pytest.mark.parametrize("block_rows", [8, 64, 1024])
+def test_rsum_kernel_block_invariance(block_rows):
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    x = _rand(50_000, seed=3)
+    got = rsum_ops.rsum_acc(x, spec, block_rows=block_rows, interpret=True)
+    want = rsum_ref.rsum_acc_ref(x, spec)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+@pytest.mark.parametrize("n,g", [(1000, 1), (1000, 16), (4096, 100),
+                                 (20_000, 700)])
+def test_segment_kernel_matches_oracle(spec, n, g):
+    x = _rand(n, seed=n + g, scale=3.0)
+    rng = np.random.default_rng(n * 31 + g)
+    ids = rng.integers(0, g, n).astype(np.int32)
+    got = seg_ops.segment_rsum_kernel(x, ids, g, spec, interpret=True)
+    want = seg_ref.segment_rsum_ref(x, ids, g, spec)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("group_tile", [8, 128, 512])
+def test_segment_kernel_group_tile_invariance(group_tile):
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    x = _rand(5000, seed=9)
+    rng = np.random.default_rng(10)
+    ids = rng.integers(0, 300, 5000).astype(np.int32)
+    got = seg_ops.segment_rsum_kernel(x, ids, 300, spec,
+                                      group_tile=group_tile, interpret=True)
+    want = seg_ref.segment_rsum_ref(x, ids, 300, spec)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_segment_kernel_block_n_invariance():
+    spec = ReproSpec(dtype=jnp.float32, L=2, W=12)
+    x = _rand(4096, seed=11)
+    rng = np.random.default_rng(12)
+    ids = rng.integers(0, 64, 4096).astype(np.int32)
+    ref = seg_ref.segment_rsum_ref(x, ids, 64, spec)
+    for bn in (128, 1024, 8192):
+        got = seg_ops.segment_rsum_kernel(x, ids, 64, spec, block_n=bn,
+                                          interpret=True)
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kernel_mixed_magnitudes():
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    x = np.concatenate([_rand(1000, seed=13, scale=1e-5),
+                        np.array([4.2e8], np.float32),
+                        _rand(1000, seed=14, scale=1e3)])
+    got = rsum_ops.rsum_acc(x, spec, interpret=True)
+    want = rsum_ref.rsum_acc_ref(x, spec)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

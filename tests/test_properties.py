@@ -1,0 +1,132 @@
+"""Property-based tests (hypothesis) for the system's core invariants.
+
+The paper's claim is a *universal* statement — any permutation, any
+grouping, any schedule gives identical bits — which is exactly what
+property-based testing is for.
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import accumulator as acc_mod
+from repro.core import segment as seg_mod
+from repro.core.types import ReproSpec
+
+SPEC = ReproSpec(dtype=jnp.float32, L=2)
+
+# finite f32 values inside the documented domain (DESIGN.md §3.2):
+# |x| in [2^-80, 2^80] or exactly 0 — subnormals are outside the
+# reproducible-lattice guarantee (the extractor ladder must stay normal)
+def _safe_floats():
+    return st.floats(min_value=-2.0**80, max_value=2.0**80,
+                     allow_nan=False, allow_infinity=False, width=32
+                     ).map(lambda v: 0.0 if 0 < abs(v) < 2.0**-80 else v)
+
+
+_settings = settings(max_examples=25, deadline=None,
+                     suppress_health_check=[HealthCheck.too_slow])
+
+
+@given(st.lists(_safe_floats(), min_size=1, max_size=64),
+       st.randoms(use_true_random=False))
+@_settings
+def test_permutation_invariance(xs, rnd):
+    x = np.array(xs, np.float32)
+    ref = acc_mod.from_values(x, SPEC)
+    perm = list(range(len(x)))
+    rnd.shuffle(perm)
+    got = acc_mod.from_values(x[perm], SPEC)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.lists(_safe_floats(), min_size=2, max_size=64),
+       st.integers(min_value=1, max_value=63))
+@_settings
+def test_split_merge_equals_whole(xs, cut):
+    x = np.array(xs, np.float32)
+    cut = cut % (len(x) - 1) + 1 if len(x) > 1 else 1
+    whole = acc_mod.from_values(x, SPEC)
+    merged = acc_mod.merge(acc_mod.from_values(x[:cut], SPEC),
+                           acc_mod.from_values(x[cut:], SPEC), SPEC)
+    for a, b in zip(merged, whole):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.lists(_safe_floats(), min_size=1, max_size=48))
+@_settings
+def test_error_bound_holds(xs):
+    """Paper Eq. 6: |result - exact| <= n * 2^((1-L)W - 1) * max|b|."""
+    x = np.array(xs, np.float32)
+    got = float(acc_mod.finalize(acc_mod.from_values(x, SPEC), SPEC))
+    exact = math.fsum(float(v) for v in x)
+    bound = len(x) * 2.0 ** ((1 - SPEC.L) * SPEC.W - 1) * \
+        float(np.max(np.abs(x)) if len(x) else 0)
+    # + one final-rounding ulp of the result
+    slack = np.spacing(np.float32(abs(exact) or 1.0)).astype(float) * 4
+    assert abs(got - exact) <= bound + slack
+
+
+@given(st.lists(_safe_floats(), min_size=1, max_size=64))
+@_settings
+def test_window_invariant_always(xs):
+    x = np.array(xs, np.float32)
+    acc = acc_mod.from_values(x, SPEC)
+    assert np.all(np.asarray(acc.k) >= 0)
+    assert np.all(np.asarray(acc.k) < SPEC.window_ulps)
+    assert int(acc.e1) % SPEC.W == 0          # lattice membership
+
+
+@given(st.lists(_safe_floats(), min_size=1, max_size=40),
+       st.lists(st.integers(min_value=0, max_value=4), min_size=1,
+                max_size=40))
+@_settings
+def test_segment_methods_agree(xs, ids):
+    n = min(len(xs), len(ids))
+    x = np.array(xs[:n], np.float32)
+    i = np.array(ids[:n], np.int32)
+    a = seg_mod.segment_rsum(x, i, 5, SPEC, method="scatter")
+    b = seg_mod.segment_rsum(x, i, 5, SPEC, method="onehot")
+    c = seg_mod.segment_rsum(x, i, 5, SPEC, method="sort")
+    for other in (b, c):
+        for p, q in zip(a, other):
+            np.testing.assert_array_equal(np.asarray(p), np.asarray(q))
+
+
+@given(st.lists(_safe_floats(), min_size=3, max_size=60))
+@_settings
+def test_merge_associativity(xs):
+    x = np.array(xs, np.float32)
+    k = len(x) // 3 or 1
+    p1 = acc_mod.from_values(x[:k], SPEC)
+    p2 = acc_mod.from_values(x[k:2 * k] if len(x) > k else x[:0], SPEC) \
+        if len(x) > k else acc_mod.zeros(SPEC)
+    p3 = acc_mod.from_values(x[2 * k:], SPEC) if len(x) > 2 * k \
+        else acc_mod.zeros(SPEC)
+    left = acc_mod.merge(acc_mod.merge(p1, p2, SPEC), p3, SPEC)
+    right = acc_mod.merge(p1, acc_mod.merge(p2, p3, SPEC), SPEC)
+    for a, b in zip(left, right):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.floats(min_value=float(np.float32(-2.0**80)),
+                 max_value=float(np.float32(2.0**80)), allow_nan=False,
+                 width=32))
+@_settings
+def test_single_value_roundtrip(v):
+    """L=3 reproduces any single value exactly (the residual after three
+    levels sits below 0.5 ulp even after the worst-case lattice snap-up);
+    L=2 stays within the paper's Eq. 6 bound for n=1."""
+    x = np.array([v], np.float32)
+    spec3 = ReproSpec(dtype=jnp.float32, L=3)
+    got3 = float(acc_mod.finalize(acc_mod.from_values(x, spec3), spec3))
+    assert np.float32(got3) == x[0] or (x[0] == 0 and got3 == 0)
+    got2 = float(acc_mod.finalize(acc_mod.from_values(x, SPEC), SPEC))
+    bound = 2.0 ** ((1 - SPEC.L) * SPEC.W + SPEC.W - 1) * abs(float(x[0]))
+    # Eq. 6 with the snap-up margin: residual < 2^(e1 - W - m - 1),
+    # e1 <= E + m - W + 1 + W  =>  |err| <= 2^(E - W)  ~ |v| * 2^-W * 2
+    assert abs(got2 - float(x[0])) <= abs(float(x[0])) * 2.0 ** (-SPEC.W + 7) \
+        + 1e-45

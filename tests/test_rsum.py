@@ -1,0 +1,108 @@
+"""Tests for the faithful RSUM Algorithms 2/3 (paper §III)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accumulator as acc_mod
+from repro.core import rsum
+from repro.core.types import ReproSpec
+
+SPECS = [
+    ReproSpec(dtype=jnp.float32, L=2),
+    ReproSpec(dtype=jnp.float32, L=3),
+    ReproSpec(dtype=jnp.float64, L=2),
+]
+
+
+def _rand(n, seed=0, scale=1.0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * scale).astype(dtype)
+
+
+def _bound(x, spec):
+    return len(x) * 2.0 ** ((1 - spec.L) * spec.W - 1) * np.max(np.abs(x)) \
+        + 64 * np.finfo(np.dtype(spec.dtype)).eps * np.sum(np.abs(x))
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_scalar_accuracy(spec):
+    x = _rand(512, seed=1, dtype=np.dtype(spec.dtype))
+    S, C = rsum.rsum_scalar(x, spec)
+    got = float(rsum.finalize_state(S, C, spec))
+    assert abs(got - x.astype(np.float64).sum()) <= _bound(x, spec)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_simd_accuracy(spec):
+    x = _rand(4096, seed=2, dtype=np.dtype(spec.dtype))
+    S, C = rsum.rsum_simd(x, spec, V=8)
+    got = float(rsum.finalize_state(S, C, spec))
+    assert abs(got - x.astype(np.float64).sum()) <= _bound(x, spec)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_scalar_simd_agree_bitwise(spec):
+    """Same extractor ladder => scalar and SIMD must agree exactly."""
+    x = _rand(1024, seed=3, dtype=np.dtype(spec.dtype))
+    f = int(rsum.choose_f(jnp.asarray(x), spec))
+    Ss, Cs = rsum.rsum_scalar(x, spec, f=f)
+    Sv, Cv = rsum.rsum_simd(x, spec, V=8, f=f)
+    a = float(rsum.finalize_state(Ss, Cs, spec))
+    b = float(rsum.finalize_state(Sv, Cv, spec))
+    assert np.float64(a).tobytes() == np.float64(b).tobytes()
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_simd_permutation_invariance(spec):
+    x = _rand(2048, seed=4, scale=10.0, dtype=np.dtype(spec.dtype))
+    f = int(rsum.choose_f(jnp.asarray(x), spec))
+    ref = float(rsum.finalize_state(*rsum.rsum_simd(x, spec, V=16, f=f), spec))
+    rng = np.random.default_rng(5)
+    for _ in range(2):
+        xp = x[rng.permutation(len(x))]
+        got = float(rsum.finalize_state(*rsum.rsum_simd(xp, spec, V=16, f=f),
+                                        spec))
+        assert np.float64(got).tobytes() == np.float64(ref).tobytes()
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_demotion_triggered(spec):
+    """Start f low so a large late value forces Alg.2 line 4-7 demotion."""
+    dt = np.dtype(spec.dtype)
+    x = np.concatenate([_rand(100, seed=6, scale=1e-4, dtype=dt),
+                        np.array([1e6], dtype=dt),
+                        _rand(100, seed=7, scale=1e-4, dtype=dt)])
+    S, C = rsum.rsum_scalar(x, spec)
+    got = float(rsum.finalize_state(S, C, spec))
+    want = x.astype(np.float64).sum()
+    assert abs(got - want) <= _bound(x, spec)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_chunked_matches_single_call(spec):
+    """Fig. 6: chunked invocation must equal one big call bit-for-bit when
+    the ladder is the same (state persistence is exact)."""
+    x = _rand(2048, seed=8, dtype=np.dtype(spec.dtype))
+    whole = float(rsum.finalize_state(*rsum.rsum_simd_chunked(x, spec, c=2048,
+                                                              V=8), spec))
+    chunked = float(rsum.finalize_state(*rsum.rsum_simd_chunked(x, spec, c=256,
+                                                                V=8), spec))
+    assert np.float64(whole).tobytes() == np.float64(chunked).tobytes()
+
+
+def test_agrees_with_fast_path_within_bound():
+    """Faithful Alg.3 and the lattice fast path share the error envelope."""
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    x = _rand(4096, seed=9, scale=5.0)
+    slow = float(rsum.finalize_state(*rsum.rsum_simd(x, spec, V=8), spec))
+    fast = float(acc_mod.finalize(acc_mod.from_values(x, spec), spec))
+    assert abs(slow - fast) <= 2 * _bound(x, spec)
+
+
+def test_window_invariant_after_run():
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    x = _rand(777, seed=10, scale=42.0)
+    S, C = rsum.rsum_scalar(x, spec)
+    S = np.asarray(S)
+    u = 2.0 ** np.floor(np.log2(np.abs(S)))
+    assert np.all(S >= 1.5 * u) and np.all(S < 1.75 * u)

@@ -1,0 +1,124 @@
+"""Tests for reproducible GROUPBY (segment_rsum) and summation buffers."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accumulator as acc_mod
+from repro.core import buffers, segment
+from repro.core.types import ReproSpec
+from repro.numerics import DecimalSpec, decimal_segment_sum
+
+SPEC = ReproSpec(dtype=jnp.float32, L=2)
+METHODS = ["scatter", "sort", "onehot"]
+
+
+def _data(n, g, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    vals = (rng.standard_normal(n) * scale).astype(np.float32)
+    ids = rng.integers(0, g, n).astype(np.int32)
+    return vals, ids
+
+
+def _ref(vals, ids, g):
+    out = np.zeros(g, np.float64)
+    np.add.at(out, ids, vals.astype(np.float64))
+    return out
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("g", [1, 16, 257])
+def test_segment_accuracy(method, g):
+    vals, ids = _data(5000, g, seed=1)
+    acc = segment.segment_rsum(vals, ids, g, SPEC, method=method)
+    got = np.asarray(acc_mod.finalize(acc, SPEC))
+    want = _ref(vals, ids, g)
+    atol = len(vals) * 2.0 ** ((1 - SPEC.L) * SPEC.W - 1) * np.abs(vals).max()
+    np.testing.assert_allclose(got, want, atol=max(atol, 1e-4), rtol=0)
+
+
+def test_methods_agree_bitwise():
+    vals, ids = _data(4096, 64, seed=2, scale=100.0)
+    accs = [segment.segment_rsum(vals, ids, 64, SPEC, method=m)
+            for m in METHODS]
+    for other in accs[1:]:
+        for a, b in zip(accs[0], other):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_permutation_invariance_bitwise():
+    vals, ids = _data(3000, 32, seed=3)
+    ref = segment.segment_rsum(vals, ids, 32, SPEC, method="scatter")
+    rng = np.random.default_rng(4)
+    perm = rng.permutation(len(vals))
+    got = segment.segment_rsum(vals[perm], ids[perm], 32, SPEC,
+                               method="onehot")
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chunk_size_invariance_bitwise():
+    """The buffer-size knob must not change results (only throughput)."""
+    vals, ids = _data(2048, 16, seed=5)
+    ref = segment.segment_rsum(vals, ids, 16, SPEC, method="scatter",
+                               chunk=4096)
+    for chunk in (64, 256, 1024):
+        got = segment.segment_rsum(vals, ids, 16, SPEC, method="scatter",
+                                   chunk=chunk)
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for chunk in (32, 128):
+        got = segment.segment_rsum(vals, ids, 16, SPEC, method="onehot",
+                                   chunk=chunk)
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_split_merge_matches_whole():
+    """Sharding the input (data parallelism) gives identical bits."""
+    vals, ids = _data(4000, 24, seed=6)
+    whole = segment.segment_rsum(vals, ids, 24, SPEC)
+    parts = [segment.segment_rsum(vals[s], ids[s], 24, SPEC)
+             for s in (slice(0, 1500), slice(1500, 4000))]
+    merged = acc_mod.merge(parts[0], parts[1], SPEC)
+    for a, b in zip(merged, whole):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_having_style_stability():
+    """The paper's HAVING SUM(f) >= 1 example: thresholding is stable."""
+    vals, ids = _data(2000, 8, seed=7)
+    rng = np.random.default_rng(8)
+    outs = []
+    for _ in range(3):
+        perm = rng.permutation(len(vals))
+        acc = segment.segment_rsum(vals[perm], ids[perm], 8, SPEC)
+        outs.append(np.asarray(acc_mod.finalize(acc, SPEC)) >= 1.0)
+    assert all(np.array_equal(outs[0], o) for o in outs)
+
+
+def test_summation_buffers_faithful():
+    """Paper §V-A buffers agree with the blocked path bit-for-bit."""
+    vals, ids = _data(300, 4, seed=9)
+    st = buffers.init(4, bsz=16, spec=SPEC)
+    st = buffers.append(st, ids, vals, SPEC)
+    acc = buffers.flush_all(st, SPEC)
+    ref = segment.segment_rsum(vals, ids, 4, SPEC, method="scatter")
+    got = np.asarray(acc_mod.finalize(acc, SPEC))
+    want = np.asarray(acc_mod.finalize(ref, SPEC))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_optimal_bsz_eq4():
+    # paper Eq. 4 sanity: 1 MiB cache, float32, F=1
+    assert buffers.optimal_bsz(1, 1, 4, cache_bytes=2**20) == 4096  # bsz_max
+    assert buffers.optimal_bsz(2**12, 1, 4, cache_bytes=2**20) == 64
+    assert buffers.optimal_bsz(2**12, 256, 4, cache_bytes=2**20) == 4096
+
+
+def test_decimal_baseline():
+    vals, ids = _data(1000, 10, seed=10)
+    d = DecimalSpec(precision=9, scale=4)
+    out, overflow, counts = decimal_segment_sum(vals, ids, 10, d)
+    assert not bool(np.asarray(overflow).any())
+    want = _ref(np.round(vals.astype(np.float64) * 1e4) / 1e4, ids, 10)
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-9)
