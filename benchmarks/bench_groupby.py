@@ -1,23 +1,39 @@
-"""Paper Fig. 7 / Fig. 10 / Table III: GROUPBY across group counts.
+"""Paper Fig. 7 / Fig. 10 / Table III: GROUPBY across group counts, plus
+the unified engine (`groupby_agg`) on a TPC-H-Q1-shaped workload.
 
-Compares float32 (non-reproducible baseline), DECIMAL, and the repro
-strategies (scatter = drop-in §IV; sort = PartitionAndAggregate §V;
-onehot = MXU summation-buffer fast path) across n_groups, reporting
+Part 1 (``run``) compares float32 (non-reproducible baseline), DECIMAL, and
+the repro strategies (scatter = drop-in §IV; sort = PartitionAndAggregate
+§V; onehot = MXU summation-buffer fast path) across n_groups, reporting
 slowdown vs float32 and the geometric-mean slowdown (Table III analogue).
+
+Part 2 (``run_agg``) benchmarks the multi-aggregate engine across planner
+paths on the Q1 shape from examples/groupby_analytics.py — SUM x3, AVG x3,
+COUNT over 6 groups — against (a) the float32 multi-pass baseline and
+(b) an unfused repro path (one segment_rsum per accumulator column),
+showing what the fused table buys.  Results land in BENCH_groupby.json at
+the repo root.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import json
 import math
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks._util import keys, ns_per_elem, save_results, timeit, uniform
+from repro.core import accumulator as acc_mod
 from repro.core import segment as seg_mod
 from repro.core.types import ReproSpec
 from repro.numerics import DecimalSpec, decimal_segment_sum
+from repro.ops import groupby_agg, plan_groupby
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_groupby.json")
 
 
 def run(quick: bool = True):
@@ -70,5 +86,86 @@ def run(quick: bool = True):
     return rows, summary
 
 
+# ---------------------------------------------------------------------------
+# Part 2: the unified multi-aggregate engine (TPC-H Q1 shape)
+# ---------------------------------------------------------------------------
+
+Q1_AGGS = [("sum", 0), ("sum", 1), ("sum_prod", 1, 2), ("mean", 0),
+           ("mean", 1), ("mean", 3), ("count",)]
+
+
+def _q1_table(n, seed=11):
+    rng = np.random.default_rng(seed)
+    qty = (rng.integers(1, 51, n) + rng.standard_normal(n) * 1e-3)
+    price = rng.lognormal(7, 1.5, n)
+    disc = rng.random(n) * 0.1
+    vals = np.stack([qty, price, 1.0 - disc, disc], 1).astype(np.float32)
+    flag = rng.integers(0, 6, n).astype(np.int32)
+    return jnp.asarray(vals), jnp.asarray(flag)
+
+
+def _float_q1(v, ids, g):
+    """Non-reproducible float baseline: one segment_sum per column + count."""
+    seg = functools.partial(jax.ops.segment_sum, num_segments=g)
+    s_qty, s_price = seg(v[:, 0], ids), seg(v[:, 1], ids)
+    s_disc_price = seg(v[:, 1] * v[:, 2], ids)
+    cnt = seg(jnp.ones_like(v[:, 0]), ids)
+    return (s_qty, s_price, s_disc_price, s_qty / cnt, s_price / cnt,
+            seg(v[:, 3], ids) / cnt, cnt)
+
+
+def _unfused_repro_q1(v, ids, g, spec):
+    """The pre-engine pattern: one independent segment_rsum per column."""
+    fin = lambda x: acc_mod.finalize(
+        seg_mod.segment_rsum(x, ids, g, spec, method="scatter"), spec)
+    s_qty, s_price = fin(v[:, 0]), fin(v[:, 1])
+    s_dp, s_disc = fin(v[:, 1] * v[:, 2]), fin(v[:, 3])
+    cnt = fin(jnp.ones_like(v[:, 0]))
+    return (s_qty, s_price, s_dp, s_qty / cnt, s_price / cnt, s_disc / cnt,
+            cnt)
+
+
+def run_agg(quick: bool = True):
+    n, g = (2**17, 6) if quick else (2**22, 6)
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    v, ids = _q1_table(n)
+
+    base = jax.jit(functools.partial(_float_q1, g=g))
+    t_base = timeit(base, v, ids, iters=3)
+    rows = {"n": n, "n_groups": g, "aggs": [list(a) for a in Q1_AGGS],
+            "float32_ns_per_row": ns_per_elem(t_base, n)}
+
+    f = jax.jit(functools.partial(_unfused_repro_q1, g=g, spec=spec))
+    rows["unfused_repro_slowdown"] = timeit(f, v, ids, iters=3) / t_base
+
+    for method in ("scatter", "sort", "onehot", "auto"):
+        f = jax.jit(functools.partial(
+            groupby_agg, num_segments=g, aggs=Q1_AGGS, spec=spec,
+            method=method))
+        rows[f"groupby_agg_{method}_slowdown"] = \
+            timeit(f, v, ids, iters=3) / t_base
+    rows["plan"] = dataclasses.asdict(plan_groupby(n, g, spec, ncols=5))
+
+    print(f"\n== groupby_agg: TPC-H Q1 shape, n={n}, {g} groups ==")
+    print(f"  float32 multi-pass baseline: "
+          f"{rows['float32_ns_per_row']:.2f} ns/row")
+    for k in sorted(rows):
+        if k.endswith("_slowdown"):
+            print(f"  {k:34} {rows[k]:6.2f}x")
+    print(f"  planner: {rows['plan']['method']} ({rows['plan']['reason']})")
+    return rows
+
+
+def emit_bench_json(quick: bool = True):
+    _, fig7_summary = run(quick=quick)   # full rows: benchmarks/results/
+    agg_rows = run_agg(quick=quick)
+    payload = {"fig7_summary": fig7_summary, "groupby_agg": agg_rows}
+    with open(BENCH_JSON, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    print("wrote", os.path.abspath(BENCH_JSON))
+    return payload
+
+
 if __name__ == "__main__":
-    run(quick=False)
+    import sys
+    emit_bench_json(quick="--quick" in sys.argv)

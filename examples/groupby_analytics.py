@@ -3,17 +3,21 @@
     PYTHONPATH=src python examples/groupby_analytics.py
 
 Builds a synthetic lineitem-like table and runs
-    SELECT flag_status, SUM(qty), SUM(price), SUM(price*(1-disc)), AVG(...)
+    SELECT flag_status, SUM(qty), SUM(price), SUM(price*(1-disc)),
+           AVG(qty), AVG(price), AVG(disc), VAR(price), COUNT(*),
+           MIN(qty), MAX(price)
     GROUP BY flag_status
-with (a) plain float aggregation and (b) repro aggregation, under different
-physical row orders — the paper's MonetDB scenario.  Also runs a mini
-PageRank to reproduce the paper's rank-instability observation.
+with (a) plain float aggregation and (b) the unified repro engine
+(`repro.ops.groupby_agg` — one fused pass for the whole aggregate list),
+under different physical row orders — the paper's MonetDB scenario.  Also
+runs a mini PageRank to reproduce the paper's rank-instability observation.
 """
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import ReproSpec, finalize, segment_rsum
+from repro.ops import groupby_agg, plan_groupby
 
 rng = np.random.default_rng(1)
 N, G = 400_000, 6      # rows, flag/status combinations
@@ -26,20 +30,41 @@ disc = (rng.random(N) * 0.1).astype(np.float32)
 flag = rng.integers(0, G, N).astype(np.int32)
 perm = rng.permutation(N)
 
+# columns: 0=qty, 1=price, 2=(1-disc), 3=disc
+table = np.stack([qty, price, 1.0 - disc, disc], axis=1)
+Q1_AGGS = [("sum", 0), ("sum", 1), ("sum_prod", 1, 2), ("mean", 0),
+           ("mean", 1), ("mean", 3), ("var", 1), ("count",), ("min", 0),
+           ("max", 1)]
+
 print("TPC-H Q1-shaped aggregation over", N, "rows,", G, "groups")
+plan = plan_groupby(N, G, spec, ncols=6)  # Q1_AGGS compile to 6 acc columns
+print(f"planner: {plan.method} (chunk={plan.chunk}) — {plan.reason}\n")
+
+repro_a = groupby_agg(table, flag, G, Q1_AGGS, spec)
+repro_b = groupby_agg(table[perm], flag[perm], G, Q1_AGGS, spec)
+
 for label, expr in [("SUM(qty)", qty), ("SUM(price)", price),
                     ("SUM(price*(1-disc))", price * (1 - disc))]:
     f_a = np.asarray(jax.ops.segment_sum(jnp.asarray(expr),
                                          jnp.asarray(flag), G))
     f_b = np.asarray(jax.ops.segment_sum(jnp.asarray(expr[perm]),
                                          jnp.asarray(flag[perm]), G))
-    r_a = np.asarray(finalize(segment_rsum(expr, flag, G, spec), spec))
-    r_b = np.asarray(finalize(segment_rsum(expr[perm], flag[perm], G, spec),
-                              spec))
     print(f"  {label:22} float stable: {np.array_equal(f_a, f_b)!s:5}  "
-          f"repro stable: {np.array_equal(r_a, r_b)!s:5}  "
           f"max |float diff|: {np.abs(f_a - f_b).max():.3e}")
-    assert np.array_equal(r_a, r_b)
+
+print()
+for name in repro_a:
+    a, b = np.asarray(repro_a[name]), np.asarray(repro_b[name])
+    stable = np.array_equal(a, b, equal_nan=True)
+    print(f"  {name:18} repro stable: {stable!s:5}  "
+          f"group 0 = {a[0]:.6g}")
+    assert stable, name
+
+# AVG no longer computed by hand: the engine derives it (and VAR/STD) from
+# one fused accumulator table — reproducible because its inputs are.
+cnt = np.asarray(repro_a["count(*)"])
+assert np.allclose(np.asarray(repro_a["mean(1)"]),
+                   np.asarray(repro_a["sum(1)"]) / cnt)
 
 # ---- PageRank instability (paper §I) --------------------------------------
 print("\nPageRank on a random graph, two edge orders:")

@@ -4,4 +4,5 @@ from repro.core import (  # noqa: F401
     ReproSpec, ReproAcc, from_values, finalize, merge, segment_rsum,
     repro_psum,
 )
+from repro.ops import groupby_agg, plan_groupby, sharded_groupby_agg  # noqa: F401,E501
 __version__ = "1.0.0"

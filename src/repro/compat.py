@@ -1,0 +1,55 @@
+"""Version-compatibility shims for the jax APIs this library leans on.
+
+``jax.shard_map`` (with ``axis_names`` / ``check_vma``) is the stable
+spelling of what older releases ship as
+``jax.experimental.shard_map.shard_map`` (with ``auto`` / ``check_rep``).
+Call sites use :func:`shard_map` below with the stable keyword names; the
+shim translates for older jax so one codebase runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "axis_size", "set_mesh"]
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` is newer than some supported releases; on older jax the
+    ``Mesh`` object itself is the equivalent context manager.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a manual mesh axis (``jax.lax.axis_size`` is newer
+    than some supported jax releases; older ones expose the size through
+    ``jax.core.axis_frame``)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.core.axis_frame(axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` if available, else the experimental fallback.
+
+    ``axis_names`` lists the *manual* mesh axes (default: all of them);
+    on old jax this maps to the complementary ``auto`` set, and
+    ``check_vma`` maps to ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)

@@ -1,0 +1,211 @@
+"""Fused multi-column reproducible segment aggregation (DESIGN.md §3.2/§10).
+
+The paper's GROUPBY-SUM generalizes to the full SQL aggregate family once the
+value column is replaced by a *stacked column matrix*: COUNT is a SUM over a
+ones column, MEAN is SUM/COUNT, VAR/STD are algebraic functions of
+(SUM(x), SUM(x*x), COUNT), and SUM(x*y) is a SUM over an elementwise product
+column.  All of these reduce to one fused segment reduction of a matrix
+``X (n, ncols)`` into an accumulator *table* ``(G, ncols, L)`` — one
+extraction pass over the rows, one kernel invocation, every derived aggregate
+a pure (hence reproducible) function of the finalized table.
+
+This module owns the three jnp execution strategies that previously lived in
+:mod:`repro.core.segment` (scatter / sort / onehot), generalized in two ways:
+
+* arbitrary feature shape ``F`` — ``values (n, *F)`` aggregates to
+  ``(G, *F, L)``; the fused GROUPBY engine uses ``F = (ncols,)``;
+* per-column lattice exponents — ``e1`` may be any shape broadcastable to
+  ``F`` so each column gets the tightest lattice its magnitude admits.
+
+Method selection lives one layer up, in :mod:`repro.ops.plan`; the Pallas
+fast path lives in :mod:`repro.kernels.segment_rsum`.  All four paths return
+bit-identical tables for any ordering, chunking or sharding of the rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import eft
+from repro.core import accumulator as acc_mod
+from repro.core.accumulator import ReproAcc
+from repro.core.types import ReproSpec
+
+__all__ = [
+    "pad_and_chunk", "segment_table", "scatter_table", "sort_table",
+    "onehot_table", "onehot_block_bound", "scatter_chunk_bound",
+    "default_chunk",
+]
+
+
+def onehot_block_bound(spec: ReproSpec) -> int:
+    """Largest one-hot matmul block with exact float accumulation.
+
+    block * 2^(W-1) ulp must stay exactly representable: block <= 2^(m-W+2).
+    (f32/W=18: 128 rows; f32/W=12: 8192 rows — W trades accuracy for tile
+    size, the TPU analogue of the paper's bsz/cache trade-off.)
+    """
+    return 1 << (spec.m - spec.W + 2)
+
+
+def scatter_chunk_bound(spec: ReproSpec) -> int:
+    """Largest scatter chunk whose per-group int sums cannot overflow.
+
+    chunk * 2^(W-1) < 2^(bits-1): int32/W=18 -> 2^13; we halve for margin.
+    """
+    bits = 31 if spec.m <= 30 else 63
+    return 1 << (bits - spec.W)
+
+
+def default_chunk(method: str, spec: ReproSpec) -> int:
+    """Per-method safe default for the summation-buffer size knob."""
+    if method in ("onehot", "pallas"):
+        return onehot_block_bound(spec)
+    return min(scatter_chunk_bound(spec), 4096)
+
+
+def pad_and_chunk(values, chunk: int, segment_ids=None, dump_id=None):
+    """Pad rows to a multiple of ``chunk`` and reshape to (nblk, chunk, *F).
+
+    The one shared pad/chunk helper (DESIGN.md §10): padding rows are zeros,
+    and — when ``segment_ids`` is given — carry ``dump_id`` so each caller
+    routes them to its own dump row (``num_segments`` for the jnp strategies,
+    ``-1`` for the Pallas kernel whose one-hot matches no group tile).
+
+    Returns ``values`` chunked, or ``(values, segment_ids)`` chunked when ids
+    are provided.
+    """
+    if segment_ids is not None and dump_id is None:
+        raise ValueError("pad_and_chunk needs a dump_id to pad segment_ids "
+                         "with (the caller's dump row / sentinel)")
+    n = values.shape[0]
+    feat = values.shape[1:]
+    pad = (-n) % chunk
+    if pad:
+        values = jnp.concatenate(
+            [values, jnp.zeros((pad, *feat), values.dtype)])
+        if segment_ids is not None:
+            segment_ids = jnp.concatenate(
+                [segment_ids, jnp.full(pad, dump_id, segment_ids.dtype)])
+    values = values.reshape(-1, chunk, *feat)
+    if segment_ids is None:
+        return values
+    return values, segment_ids.reshape(-1, chunk)
+
+
+def _feat_e1(e1, feat):
+    """Broadcast a (possibly scalar) e1 to the feature shape as int32."""
+    return jnp.broadcast_to(jnp.asarray(e1, jnp.int32), feat)
+
+
+def scatter_table(values, segment_ids, num_segments, spec: ReproSpec, e1,
+                  chunk: int):
+    """Chunked integer scatter-add with renormalization between chunks
+    (the drop-in strategy of paper §IV)."""
+    vs, ids = pad_and_chunk(values, chunk, segment_ids, dump_id=num_segments)
+    nseg = num_segments + 1  # last row collects padding, sliced off below
+    idt = spec.int_dtype
+    feat = values.shape[1:]
+    e1_f = _feat_e1(e1, feat)
+
+    def step(carry, inp):
+        k_tab, c_tab = carry
+        v_c, id_c = inp
+        k = acc_mod.extract(v_c, e1_f, spec)                # (chunk, *F, L)
+        part = jax.ops.segment_sum(k, id_c, num_segments=nseg)  # exact ints
+        k_tab, c_tab = acc_mod.renorm(k_tab + part, c_tab, spec)
+        return (k_tab, c_tab), None
+
+    k0 = jnp.zeros((nseg, *feat, spec.L), idt)
+    (k_tab, c_tab), _ = lax.scan(step, (k0, k0), (vs, ids))
+    return k_tab[:num_segments], c_tab[:num_segments]
+
+
+def sort_table(values, segment_ids, num_segments, spec: ReproSpec, e1,
+               chunk: int):
+    """Partition first (paper §V-B), then aggregate: sort plays the role of
+    the radix partitioning pass; aggregation bits are identical by design."""
+    order = jnp.argsort(segment_ids)
+    return scatter_table(values[order], segment_ids[order], num_segments,
+                         spec, e1, chunk)
+
+
+def onehot_table(values, segment_ids, num_segments, spec: ReproSpec, e1,
+                 block: int):
+    """Per-level one-hot matmul accumulation — exact in float within a block
+    (the MXU summation buffer), integer renorm between blocks."""
+    block = min(block, onehot_block_bound(spec))
+    vs, ids = pad_and_chunk(values, block, segment_ids, dump_id=num_segments)
+    nseg = num_segments + 1
+    idt = spec.int_dtype
+    feat = values.shape[1:]
+    e1_f = _feat_e1(e1, feat)
+    lvl = jnp.arange(spec.L, dtype=jnp.int32)
+    es = e1_f - lvl.reshape(spec.L, *([1] * len(feat))) * spec.W  # (L, *F)
+    inv_ulp = eft.pow2(spec.m - es, spec.dtype)                   # (L, *F)
+
+    def step(carry, inp):
+        k_tab, c_tab = carry
+        v_c, id_c = inp
+        r = v_c.astype(spec.dtype)
+        onehot = jax.nn.one_hot(id_c, nseg, dtype=spec.dtype)  # (block, nseg)
+        parts = []
+        for l in range(spec.L):
+            A = eft.extractor(es[l], spec.dtype)             # (*F,)
+            q, r = eft.eft_fixed(A, r)
+            # exact: per-group |sum q| <= block * 2^(W-1) ulp <= 2^(m+1) ulp
+            s = jnp.einsum("n...,ng->g...", q, onehot)       # (nseg, *F)
+            parts.append((s * inv_ulp[l]).astype(idt))
+        part = jnp.stack(parts, axis=-1)                     # (nseg, *F, L)
+        k_tab, c_tab = acc_mod.renorm(k_tab + part, c_tab, spec)
+        return (k_tab, c_tab), None
+
+    k0 = jnp.zeros((nseg, *feat, spec.L), idt)
+    (k_tab, c_tab), _ = lax.scan(step, (k0, k0), (vs, ids))
+    return k_tab[:num_segments], c_tab[:num_segments]
+
+
+_STRATEGIES = {
+    "scatter": scatter_table,
+    "sort": sort_table,
+    "onehot": onehot_table,
+}
+
+
+def segment_table(values, segment_ids, num_segments: int, spec: ReproSpec,
+                  method: str, e1=None, chunk: int | None = None) -> ReproAcc:
+    """Fused reproducible segment reduction: ``(n, *F) -> ReproAcc (G, *F, L)``.
+
+    ``method`` must be an executable strategy name ('scatter' | 'sort' |
+    'onehot' | 'pallas') — ``'auto'`` resolution belongs to
+    :func:`repro.ops.plan.plan_groupby`.  ``e1`` may be scalar or any shape
+    broadcastable to ``F`` (per-column lattices); defaults to the per-feature
+    row maximum, which every execution path shares so their tables are
+    bit-identical.
+    """
+    values = jnp.asarray(values)
+    segment_ids = jnp.asarray(segment_ids, jnp.int32)
+    if segment_ids.ndim != 1 or values.shape[0] != segment_ids.shape[0]:
+        raise ValueError("segment_table expects values (n, *F) and ids (n,)")
+    values = values.astype(spec.dtype)
+    feat = values.shape[1:]
+    if e1 is None:
+        e1 = acc_mod.required_e1(values, spec, axis=0)       # (*F,)
+    if method == "pallas":
+        from repro.kernels.segment_rsum.ops import segment_agg_kernel
+        flat = values.reshape(values.shape[0], -1)           # (n, prod(F))
+        acc = segment_agg_kernel(flat, segment_ids, num_segments, spec,
+                                 e1=_feat_e1(e1, feat).reshape(-1),
+                                 block_n=chunk)
+        return ReproAcc(k=acc.k.reshape(num_segments, *feat, spec.L),
+                        C=acc.C.reshape(num_segments, *feat, spec.L),
+                        e1=acc.e1.reshape(num_segments, *feat))
+    if method not in _STRATEGIES:
+        raise ValueError(f"unknown method {method!r}")
+    if chunk is None:
+        chunk = default_chunk(method, spec)
+    k, C = _STRATEGIES[method](values, segment_ids, num_segments, spec, e1,
+                               chunk)
+    e1_b = jnp.broadcast_to(_feat_e1(e1, feat), (num_segments, *feat))
+    return ReproAcc(k=k, C=C, e1=e1_b)

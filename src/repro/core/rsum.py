@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import eft
+from repro.core.aggregates import pad_and_chunk
 from repro.core.types import ReproSpec
 
 __all__ = [
@@ -142,13 +143,9 @@ def rsum_simd(values, spec: ReproSpec, V: int = 64, f=None):
     """Paper Algorithm 3 (RSUM SIMD).  Returns the paper state (S, C)."""
     values = jnp.asarray(values, spec.dtype).reshape(-1)
     nb = spec.nb
-    n = values.shape[0]
-    pad = (-n) % (V * nb)
-    if pad:
-        values = jnp.concatenate([values, jnp.zeros(pad, spec.dtype)])
-    blocks = values.reshape(-1, nb, V)
+    blocks = pad_and_chunk(values, V * nb).reshape(-1, nb, V)
     if f is None:
-        f = choose_f(values, spec)
+        f = choose_f(blocks, spec)
     S0, C0 = _expand_lanes(*init_state(f, spec), V, spec)
 
     def outer(carry, block):
@@ -173,11 +170,8 @@ def rsum_simd_chunked(values, spec: ReproSpec, c: int, V: int = 64):
     values = jnp.asarray(values, spec.dtype).reshape(-1)
     nb = spec.nb
     c = max(c, V * nb) if c % (V * nb) == 0 else c
-    pad = (-values.shape[0]) % c
-    if pad:
-        values = jnp.concatenate([values, jnp.zeros(pad, spec.dtype)])
-    chunks = values.reshape(-1, c)
-    f = choose_f(values, spec)
+    chunks = pad_and_chunk(values, c)
+    f = choose_f(chunks, spec)
     S0, C0 = init_state(f, spec)
 
     inner_pad = (-c) % (V * nb)

@@ -1,131 +1,27 @@
-"""Reproducible GROUPBY: segment sums over floating-point values (paper §IV/§V).
+"""Reproducible GROUPBY-SUM: the paper's core operation (§IV/§V).
 
-Three strategies, mirroring the paper's progression:
-
-* ``scatter``  — the drop-in analogue of §IV: per-element extraction to exact
-  integer contributions, then integer scatter-add into the (G, L) group table.
-  Integer scatter-add is associative, so the result is independent of element
-  order, chunking, or device placement.
-* ``sort``     — the PartitionAndAggregate analogue of §V-B: partition (sort)
-  by key first, then aggregate.  On TPU/XLA the aggregation arithmetic is
-  identical; the sort plays the role of the paper's radix partitioning and
-  pays off through memory locality at large group counts.
-* ``onehot``   — the TPU-native fast path (DESIGN.md §3.2): per level, the
-  contributions q are exact multiples of ulp, so a (block x G) one-hot matmul
-  accumulates them exactly in float as long as block <= 2^(m - W + 2).  The
-  paper's cache-sized summation buffer becomes an MXU-sized tile.  This is
-  the jnp reference of the Pallas kernel in kernels/segment_rsum.
+Thin compatibility wrapper.  The execution strategies (scatter = drop-in
+§IV; sort = PartitionAndAggregate §V-B; onehot = MXU summation-buffer fast
+path, DESIGN.md §3.2) live in :mod:`repro.core.aggregates`, generalized to
+fused multi-column tables; method selection lives in the cost-model planner
+:mod:`repro.ops.plan` (DESIGN.md §10); the multi-aggregate entry point is
+:func:`repro.ops.groupby_agg`.
 
 All strategies return the same canonical :class:`ReproAcc` bit-for-bit.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core import eft
 from repro.core import accumulator as acc_mod
+from repro.core import aggregates
 from repro.core.accumulator import ReproAcc
+# Back-compat re-exports: these bounds historically lived here.
+from repro.core.aggregates import (  # noqa: F401
+    onehot_block_bound, scatter_chunk_bound)
 from repro.core.types import ReproSpec
 
 __all__ = ["segment_rsum", "onehot_block_bound", "scatter_chunk_bound"]
-
-
-def onehot_block_bound(spec: ReproSpec) -> int:
-    """Largest one-hot matmul block with exact float accumulation.
-
-    block * 2^(W-1) ulp must stay exactly representable: block <= 2^(m-W+2).
-    (f32/W=18: 128 rows; f32/W=12: 8192 rows — W trades accuracy for tile
-    size, the TPU analogue of the paper's bsz/cache trade-off.)
-    """
-    return 1 << (spec.m - spec.W + 2)
-
-
-def scatter_chunk_bound(spec: ReproSpec) -> int:
-    """Largest scatter chunk whose per-group int sums cannot overflow.
-
-    chunk * 2^(W-1) < 2^(bits-1): int32/W=18 -> 2^13; we halve for margin.
-    """
-    bits = 31 if spec.m <= 30 else 63
-    return 1 << (bits - spec.W)
-
-
-def _chunk_input(values, segment_ids, chunk, num_segments, spec):
-    """Pad to a chunk multiple; padding rows go to a dump segment."""
-    n = values.shape[0]
-    feat = values.shape[1:]
-    pad = (-n) % chunk
-    if pad:
-        values = jnp.concatenate(
-            [values, jnp.zeros((pad, *feat), values.dtype)])
-        segment_ids = jnp.concatenate(
-            [segment_ids, jnp.full(pad, num_segments, segment_ids.dtype)])
-    return (values.reshape(-1, chunk, *feat),
-            segment_ids.reshape(-1, chunk))
-
-
-def _scatter_aggregate(values, segment_ids, num_segments, spec, e1, chunk):
-    """Chunked integer scatter-add with renormalization between chunks."""
-    vs, ids = _chunk_input(values, segment_ids, chunk, num_segments, spec)
-    nseg = num_segments + 1  # last row collects padding, sliced off below
-    idt = spec.int_dtype
-
-    def step(carry, inp):
-        k_tab, c_tab = carry
-        v_c, id_c = inp
-        k = acc_mod.extract(v_c, e1, spec)                  # (chunk, *F, L)
-        part = jax.ops.segment_sum(k, id_c, num_segments=nseg)  # exact ints
-        k_tab, c_tab = acc_mod.renorm(k_tab + part, c_tab, spec)
-        return (k_tab, c_tab), None
-
-    feat = values.shape[1:]
-    k0 = jnp.zeros((nseg, *feat, spec.L), idt)
-    (k_tab, c_tab), _ = lax.scan(step, (k0, k0), (vs, ids))
-    return k_tab[:num_segments], c_tab[:num_segments]
-
-
-def _sort_aggregate(values, segment_ids, num_segments, spec, e1, chunk):
-    """Partition first (paper §V-B), then aggregate: sort plays the role of
-    the radix partitioning pass; aggregation bits are identical by design."""
-    order = jnp.argsort(segment_ids)
-    return _scatter_aggregate(values[order], segment_ids[order],
-                              num_segments, spec, e1, chunk)
-
-
-def _onehot_aggregate(values, segment_ids, num_segments, spec, e1, block):
-    """Per-level one-hot matmul accumulation — exact in float within a block
-    (the MXU summation buffer), integer renorm between blocks."""
-    bound = onehot_block_bound(spec)
-    block = min(block, bound)
-    vs, ids = _chunk_input(values, segment_ids, block, num_segments, spec)
-    nseg = num_segments + 1
-    idt = spec.int_dtype
-    es = jnp.asarray(e1, jnp.int32) - jnp.arange(spec.L, dtype=jnp.int32) * spec.W
-    inv_ulp = eft.pow2(spec.m - es, spec.dtype)             # (L,)
-
-    def step(carry, inp):
-        k_tab, c_tab = carry
-        v_c, id_c = inp
-        r = v_c.astype(spec.dtype)
-        onehot = jax.nn.one_hot(id_c, nseg, dtype=spec.dtype)  # (block, nseg)
-        parts = []
-        for l in range(spec.L):
-            A = eft.extractor(es[l], spec.dtype)
-            q, r = eft.eft_fixed(A, r)
-            # exact: per-group |sum q| <= block * 2^(W-1) ulp <= 2^(m+1) ulp
-            s = jnp.einsum("n...,ng->g...", q, onehot)       # (nseg, *F)
-            parts.append((s * inv_ulp[l]).astype(idt))
-        part = jnp.stack(parts, axis=-1)                     # (nseg, *F, L)
-        k_tab, c_tab = acc_mod.renorm(k_tab + part, c_tab, spec)
-        return (k_tab, c_tab), None
-
-    feat = values.shape[1:]
-    k0 = jnp.zeros((nseg, *feat, spec.L), idt)
-    (k_tab, c_tab), _ = lax.scan(step, (k0, k0), (vs, ids))
-    return k_tab[:num_segments], c_tab[:num_segments]
 
 
 def segment_rsum(values, segment_ids, num_segments: int, spec: ReproSpec,
@@ -134,11 +30,12 @@ def segment_rsum(values, segment_ids, num_segments: int, spec: ReproSpec,
     """Bit-reproducible GROUPBY-SUM: the paper's core operation.
 
     Args:
-      values:       float (n,) — the value column.
+      values:       float (n, *F) — the value column(s).
       segment_ids:  int32 (n,) in [0, num_segments) — the key column.
       num_segments: static group count G.
       spec:         accumulator format (ScalarT, L, W).
-      method:       'scatter' | 'sort' | 'onehot' | 'auto'.
+      method:       'scatter' | 'sort' | 'onehot' | 'pallas' | 'auto' (the
+                    cost-model planner, :func:`repro.ops.plan.plan_groupby`).
       e1:           optional shared lattice exponent; derived from the global
                     max by default (per-group maxima would tighten the error
                     bound at the cost of a segment-max pass — both orderings
@@ -147,7 +44,8 @@ def segment_rsum(values, segment_ids, num_segments: int, spec: ReproSpec,
                     size knob; defaults to the per-method safe bound).
 
     Returns a batched ReproAcc with batch shape (G,).  The result is
-    bit-identical across methods, element orderings, chunk sizes and shardings.
+    bit-identical across methods, element orderings, chunk sizes and
+    shardings.
     """
     values = jnp.asarray(values)
     segment_ids = jnp.asarray(segment_ids, jnp.int32)
@@ -155,23 +53,13 @@ def segment_rsum(values, segment_ids, num_segments: int, spec: ReproSpec,
         raise ValueError("segment_rsum expects values (n, *F) and ids (n,)")
     values = values.astype(spec.dtype)
     if e1 is None:
+        # global (not per-feature) lattice: historical segment_rsum contract
         e1 = acc_mod.required_e1(values, spec)
     if method == "auto":
-        method = "onehot" if num_segments <= 4096 else "scatter"
-    if method == "scatter":
-        chunk = chunk or min(scatter_chunk_bound(spec), 4096)
-        k, C = _scatter_aggregate(values, segment_ids, num_segments, spec,
-                                  e1, chunk)
-    elif method == "sort":
-        chunk = chunk or min(scatter_chunk_bound(spec), 4096)
-        k, C = _sort_aggregate(values, segment_ids, num_segments, spec,
-                               e1, chunk)
-    elif method == "onehot":
-        chunk = chunk or onehot_block_bound(spec)
-        k, C = _onehot_aggregate(values, segment_ids, num_segments, spec,
-                                 e1, chunk)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    e1_b = jnp.broadcast_to(jnp.asarray(e1, jnp.int32),
-                            (num_segments, *values.shape[1:]))
-    return ReproAcc(k=k, C=C, e1=e1_b)
+        from repro.ops.plan import plan_groupby
+        n = int(values.shape[0])
+        ncols = int(values.size // max(n, 1)) if values.ndim > 1 else 1
+        plan = plan_groupby(n, num_segments, spec, ncols=ncols, chunk=chunk)
+        method, chunk = plan.method, plan.chunk
+    return aggregates.segment_table(values, segment_ids, num_segments, spec,
+                                    method=method, e1=e1, chunk=chunk)

@@ -5,4 +5,5 @@ ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle); tests sweep
 shapes/configs and assert bitwise agreement with the oracle.
 """
 from repro.kernels.rsum.ops import rsum, rsum_acc  # noqa: F401
-from repro.kernels.segment_rsum.ops import segment_rsum_kernel  # noqa: F401
+from repro.kernels.segment_rsum.ops import (  # noqa: F401
+    segment_agg_kernel, segment_rsum_kernel)

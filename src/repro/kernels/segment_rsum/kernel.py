@@ -8,6 +8,14 @@ mantissa never fills.  The per-group running sums live as int32 window
 offsets in VMEM scratch with one renormalization (carry propagation) per
 input block.
 
+Multi-column fusion (DESIGN.md §10): the kernel takes a *stacked* input
+(ncols, block_n) with per-column extractor ladders (L, ncols), so one
+one-hot matmul per level accumulates every aggregate column at once —
+SUM / COUNT / MEAN / VAR share a single streaming pass over the rows
+instead of re-streaming per aggregate.  The contraction
+(ncols, block_n) @ (block_n, group_tile) reuses the same one-hot operand
+for all columns.
+
 Grid: (group_tiles, input_blocks) — inner axis sequential (accumulation);
 each input block is re-streamed once per group tile, trading HBM reads for
 MXU-friendly tiles exactly the way the paper trades partitioning passes for
@@ -32,7 +40,7 @@ def exact_block_bound(m: int, W: int) -> int:
 
 def _segment_kernel(ids_ref, x_ref, a_ref, iu_ref, k_out, c_out,
                     k_acc, c_acc, *, L: int, m: int, block_n: int,
-                    group_tile: int):
+                    ncols: int, group_tile: int):
     ni = pl.program_id(1)
     nblk = pl.num_programs(1)
     gi = pl.program_id(0)
@@ -47,17 +55,17 @@ def _segment_kernel(ids_ref, x_ref, a_ref, iu_ref, k_out, c_out,
     col = jax.lax.broadcasted_iota(jnp.int32, (block_n, group_tile), 1) + base
     onehot = (ids == col).astype(jnp.float32)                # (bn, gt)
 
-    r = x_ref[...].reshape(1, block_n)                       # f32
+    r = x_ref[...].reshape(ncols, block_n)                   # f32
     for l in range(L):
-        A = a_ref[l, 0]
+        A = a_ref[l, :].reshape(ncols, 1)                    # per-column
         q = (r + A) - A                                      # EFT, fixed A
         r = r - q
         # exact: per-group |sum q| <= block_n * 2^(W-1) ulp <= 2^(m+1) ulp
         part = jax.lax.dot_general(
             q, onehot, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)              # (1, gt)
-        k_acc[l, :] += (part.reshape(group_tile)
-                        * iu_ref[l, 0]).astype(jnp.int32)
+            preferred_element_type=jnp.float32)              # (ncols, gt)
+        k_acc[l, :, :] += (part * iu_ref[l, :].reshape(ncols, 1)
+                           ).astype(jnp.int32)
 
     kk = k_acc[...]
     d = kk >> (m - 2)                                        # carry prop.
@@ -70,35 +78,36 @@ def _segment_kernel(ids_ref, x_ref, a_ref, iu_ref, k_out, c_out,
         c_out[...] = c_acc[...]
 
 
-def segment_rsum_pallas_call(ids2d, x2d, A, inv_ulp, *, L: int, m: int,
+def segment_rsum_pallas_call(ids2d, x3d, A, inv_ulp, *, L: int, m: int,
                              block_n: int, group_tile: int, num_group_tiles:
                              int, interpret: bool):
-    """ids2d/x2d: (nblk, block_n); A/inv_ulp: (L, 1) f32.
-    Returns (k, C): (L, G_padded) int32 with G_padded = tiles * group_tile."""
-    nblk = ids2d.shape[0]
+    """ids2d: (nblk, block_n); x3d: (nblk, ncols, block_n);
+    A/inv_ulp: (L, ncols) f32.  Returns (k, C): (L, ncols, G_padded) int32
+    with G_padded = tiles * group_tile."""
+    nblk, ncols = x3d.shape[0], x3d.shape[1]
     kernel = functools.partial(_segment_kernel, L=L, m=m, block_n=block_n,
-                               group_tile=group_tile)
+                               ncols=ncols, group_tile=group_tile)
     g_total = num_group_tiles * group_tile
     return pl.pallas_call(
         kernel,
         grid=(num_group_tiles, nblk),
         in_specs=[
             pl.BlockSpec((1, block_n), lambda gi, ni: (ni, 0)),
-            pl.BlockSpec((1, block_n), lambda gi, ni: (ni, 0)),
-            pl.BlockSpec((L, 1), lambda gi, ni: (0, 0)),
-            pl.BlockSpec((L, 1), lambda gi, ni: (0, 0)),
+            pl.BlockSpec((1, ncols, block_n), lambda gi, ni: (ni, 0, 0)),
+            pl.BlockSpec((L, ncols), lambda gi, ni: (0, 0)),
+            pl.BlockSpec((L, ncols), lambda gi, ni: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((L, group_tile), lambda gi, ni: (0, gi)),
-            pl.BlockSpec((L, group_tile), lambda gi, ni: (0, gi)),
+            pl.BlockSpec((L, ncols, group_tile), lambda gi, ni: (0, 0, gi)),
+            pl.BlockSpec((L, ncols, group_tile), lambda gi, ni: (0, 0, gi)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((L, g_total), jnp.int32),
-            jax.ShapeDtypeStruct((L, g_total), jnp.int32),
+            jax.ShapeDtypeStruct((L, ncols, g_total), jnp.int32),
+            jax.ShapeDtypeStruct((L, ncols, g_total), jnp.int32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((L, group_tile), jnp.int32),
-            pltpu.VMEM((L, group_tile), jnp.int32),
+            pltpu.VMEM((L, ncols, group_tile), jnp.int32),
+            pltpu.VMEM((L, ncols, group_tile), jnp.int32),
         ],
         interpret=interpret,
-    )(ids2d, x2d, A, inv_ulp)
+    )(ids2d, x3d, A, inv_ulp)

@@ -1,4 +1,11 @@
-"""Jitted public wrapper for the segment RSUM (GROUPBY) kernel."""
+"""Jitted public wrappers for the segment RSUM / fused GROUPBY kernel.
+
+``segment_agg_kernel`` is the fused multi-column entry point: a stacked
+(n, ncols) value matrix aggregates into an accumulator table (G, ncols, L)
+in one streaming pass (one one-hot matmul per level serves every column —
+DESIGN.md §10).  ``segment_rsum_kernel`` is the historical single-column
+API, kept as a thin wrapper.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,11 +16,12 @@ import jax.numpy as jnp
 from repro.core import accumulator as acc_mod
 from repro.core import eft
 from repro.core.accumulator import ReproAcc
+from repro.core.aggregates import pad_and_chunk
 from repro.core.types import ReproSpec
 from repro.kernels.segment_rsum.kernel import (exact_block_bound,
                                                segment_rsum_pallas_call)
 
-__all__ = ["segment_rsum_kernel", "exact_block_bound"]
+__all__ = ["segment_agg_kernel", "segment_rsum_kernel", "exact_block_bound"]
 
 
 def _auto_interpret() -> bool:
@@ -23,43 +31,62 @@ def _auto_interpret() -> bool:
 @functools.partial(jax.jit, static_argnames=("num_segments", "spec",
                                              "block_n", "group_tile",
                                              "interpret"))
-def segment_rsum_kernel(values, segment_ids, num_segments: int,
-                        spec: ReproSpec = ReproSpec(),
-                        block_n: int | None = None, group_tile: int = 512,
-                        interpret: bool | None = None) -> ReproAcc:
-    """Reproducible GROUPBY-SUM on the MXU.  Bit-identical to
-    ``repro.core.segment.segment_rsum`` (any method) and to ref.py."""
+def segment_agg_kernel(values, segment_ids, num_segments: int,
+                       spec: ReproSpec = ReproSpec(), e1=None,
+                       block_n: int | None = None, group_tile: int = 512,
+                       interpret: bool | None = None) -> ReproAcc:
+    """Fused reproducible GROUPBY on the MXU: (n, ncols) -> table (G, ncols, L).
+
+    Bit-identical to ``repro.core.aggregates.segment_table`` (any method)
+    given the same per-column ``e1`` (defaults to the per-column row max,
+    matching ``segment_table``).
+    """
     if interpret is None:
         interpret = _auto_interpret()
     if spec.m > 30:
         raise ValueError("the TPU kernel supports float32 accumulators")
     bound = exact_block_bound(spec.m, spec.W)
     block_n = min(block_n or bound, bound)
-    values = jnp.asarray(values, spec.dtype).reshape(-1)
+    values = jnp.asarray(values, spec.dtype)
+    if values.ndim != 2:
+        raise ValueError("segment_agg_kernel expects values (n, ncols)")
     segment_ids = jnp.asarray(segment_ids, jnp.int32).reshape(-1)
+    ncols = values.shape[1]
 
-    e1 = acc_mod.required_e1(values, spec)
-    es = e1 - jnp.arange(spec.L, dtype=jnp.int32) * spec.W
-    A = eft.extractor(es, spec.dtype).reshape(spec.L, 1)
-    inv_ulp = eft.pow2(spec.m - es, spec.dtype).reshape(spec.L, 1)
+    if e1 is None:
+        e1 = acc_mod.required_e1(values, spec, axis=0)       # (ncols,)
+    e1 = jnp.broadcast_to(jnp.asarray(e1, jnp.int32), (ncols,))
+    es = e1[None, :] - jnp.arange(spec.L, dtype=jnp.int32)[:, None] * spec.W
+    A = eft.extractor(es, spec.dtype)                        # (L, ncols)
+    inv_ulp = eft.pow2(spec.m - es, spec.dtype)              # (L, ncols)
 
-    n = values.shape[0]
-    pad = (-n) % block_n
-    if pad:
-        values = jnp.concatenate([values, jnp.zeros(pad, spec.dtype)])
-        # padding ids = -1: matches no group tile
-        segment_ids = jnp.concatenate(
-            [segment_ids, jnp.full(pad, -1, jnp.int32)])
-    x2d = values.reshape(-1, block_n)
-    ids2d = segment_ids.reshape(-1, block_n)
+    # padding ids = -1: matches no group tile
+    x3d, ids2d = pad_and_chunk(values, block_n, segment_ids, dump_id=-1)
+    x3d = x3d.transpose(0, 2, 1)                             # (nblk, nc, bn)
 
     group_tile = min(group_tile, max(num_segments, 8))
     n_tiles = -(-num_segments // group_tile)
 
     k, C = segment_rsum_pallas_call(
-        ids2d, x2d, A, inv_ulp, L=spec.L, m=spec.m, block_n=block_n,
+        ids2d, x3d, A, inv_ulp, L=spec.L, m=spec.m, block_n=block_n,
         group_tile=group_tile, num_group_tiles=n_tiles, interpret=interpret)
-    k = k[:, :num_segments].T.astype(spec.int_dtype)     # (G, L)
-    C = C[:, :num_segments].T.astype(spec.int_dtype)
-    e1_b = jnp.broadcast_to(e1, (num_segments,))
-    return ReproAcc(k=k, C=C, e1=e1_b)
+    k = k[:, :, :num_segments].transpose(2, 1, 0)            # (G, ncols, L)
+    C = C[:, :, :num_segments].transpose(2, 1, 0)
+    e1_b = jnp.broadcast_to(e1, (num_segments, ncols))
+    return ReproAcc(k=k.astype(spec.int_dtype), C=C.astype(spec.int_dtype),
+                    e1=e1_b)
+
+
+def segment_rsum_kernel(values, segment_ids, num_segments: int,
+                        spec: ReproSpec = ReproSpec(),
+                        block_n: int | None = None, group_tile: int = 512,
+                        interpret: bool | None = None) -> ReproAcc:
+    """Reproducible GROUPBY-SUM on the MXU.  Bit-identical to
+    ``repro.core.segment.segment_rsum`` (any method) and to ref.py."""
+    values = jnp.asarray(values, spec.dtype).reshape(-1)
+    # historical contract: one global lattice exponent for the value column
+    e1 = acc_mod.required_e1(values, spec)
+    acc = segment_agg_kernel(values[:, None], segment_ids, num_segments,
+                             spec, e1=e1[None], block_n=block_n,
+                             group_tile=group_tile, interpret=interpret)
+    return ReproAcc(k=acc.k[:, 0, :], C=acc.C[:, 0, :], e1=acc.e1[:, 0])

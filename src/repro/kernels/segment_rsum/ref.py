@@ -1,11 +1,12 @@
-"""Pure-jnp oracle for the segment RSUM kernel."""
+"""Pure-jnp oracles for the segment RSUM / fused GROUPBY kernels."""
 from __future__ import annotations
 
 from repro.core.accumulator import ReproAcc
+from repro.core.aggregates import segment_table
 from repro.core.segment import segment_rsum
 from repro.core.types import ReproSpec
 
-__all__ = ["segment_rsum_ref"]
+__all__ = ["segment_rsum_ref", "segment_agg_ref"]
 
 
 def segment_rsum_ref(values, segment_ids, num_segments: int,
@@ -13,3 +14,10 @@ def segment_rsum_ref(values, segment_ids, num_segments: int,
     """Must match ops.segment_rsum_kernel bit-for-bit."""
     return segment_rsum(values, segment_ids, num_segments, spec,
                         method="onehot")
+
+
+def segment_agg_ref(values, segment_ids, num_segments: int,
+                    spec: ReproSpec = ReproSpec(), e1=None) -> ReproAcc:
+    """Must match ops.segment_agg_kernel bit-for-bit (values (n, ncols))."""
+    return segment_table(values, segment_ids, num_segments, spec,
+                         method="onehot", e1=e1)

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro import configs as registry
 from repro.checkpoint import ckpt as ckpt_mod
 from repro.data.pipeline import DataConfig, synth_batch
@@ -89,14 +90,14 @@ def train_loop(model_cfg: ModelConfig, shape: ShapeConfig,
 
     p_pspecs = jax.tree.map(lambda _: P(), p_shardings)
     o_pspecs = sh.tree_manual_only(o_specs_tree, manual)
-    step_fn = jax.jit(jax.shard_map(
+    step_fn = jax.jit(compat.shard_map(
         local_step, mesh=mesh,
         in_specs=(p_pspecs, o_pspecs, batch_specs_fn(b0)),
         out_specs=(p_pspecs, o_pspecs, P()),
         axis_names=manual, check_vma=False), donate_argnums=(0, 1))
 
     def fresh() -> RunState:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             params = jax.jit(
                 lambda: lm.init_params(jax.random.PRNGKey(seed), model_cfg),
                 out_shardings=p_shardings)()
@@ -134,7 +135,7 @@ def train_loop(model_cfg: ModelConfig, shape: ShapeConfig,
             raise SimulatedFailure(f"injected failure at step {step}")
         batch = build_batch(dcfg, model_cfg, step, n_quanta,
                             train_cfg.mb_size)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             params, opt, metrics = step_fn(state.params, state.opt, batch)
         loss = float(metrics["loss"])
         losses.append((step, loss))

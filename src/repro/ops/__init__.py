@@ -1,0 +1,18 @@
+"""Relational operator layer: planned, fused, shardable aggregation.
+
+The layering (DESIGN.md §10):
+
+* :mod:`repro.ops.groupby` — ``groupby_agg``, the unified multi-aggregate
+  GROUPBY entry point (SUM/COUNT/MEAN/VAR/STD/SUM(x*y)/MIN/MAX, one fused
+  pass);
+* :mod:`repro.ops.plan` — the cost-model planner dispatching between the
+  jnp strategies and the Pallas kernel;
+* :mod:`repro.ops.sharded` — the ``shard_map`` + ``repro_psum`` distributed
+  GROUPBY, bit-identical across mesh shapes.
+"""
+from repro.ops.groupby import groupby_agg, agg_name, AGG_KINDS  # noqa: F401
+from repro.ops.plan import (  # noqa: F401
+    GroupbyPlan, plan_groupby, default_chunk, onehot_block_bound,
+    scatter_chunk_bound, pad_and_chunk, METHODS,
+)
+from repro.ops.sharded import sharded_groupby_agg  # noqa: F401

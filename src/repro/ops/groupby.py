@@ -1,0 +1,221 @@
+"""Unified reproducible GROUPBY: one entry point for the aggregate family.
+
+``groupby_agg`` is the relational operator the paper builds toward: given a
+value matrix and a key column, it computes any mix of SUM / COUNT / MEAN /
+VAR / STD / SUM(x*y) / MIN / MAX in **one** fused pass, bit-identically
+across execution methods, row orderings, chunk sizes and device shardings.
+
+How the family reduces to the paper's SUM (DESIGN.md §10): the requested
+aggregates compile to a deduplicated list of *accumulator columns* — raw
+columns, elementwise squares/products, and a ones column — which aggregate
+as a stacked matrix into one accumulator table ``(G, ncols, L)``.  Every
+derived aggregate (MEAN, VAR, STD) is then a fixed elementwise function of
+the finalized sums; since the sums are bit-reproducible and the finalizer is
+a pure function, the derived results are too (the argument the paper makes
+for HAVING/ORDER-BY stability, extended to Kamat & Nandi's one-pass
+VAR/STD).  MIN/MAX need no accumulator at all: float min/max is associative,
+so ``segment_min``/``segment_max`` are exact and order-independent as-is.
+
+Column squares and products are rounded once per element (IEEE multiply) —
+deterministic and order-independent, so fusing them costs no reproducibility.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import accumulator as acc_mod
+from repro.core import aggregates
+from repro.core.types import ReproSpec
+from repro.ops.plan import plan_groupby
+
+__all__ = ["groupby_agg", "agg_name", "AGG_KINDS"]
+
+AGG_KINDS = ("sum", "count", "mean", "var", "std", "min", "max", "sum_prod")
+
+
+def _normalize(aggs):
+    """Accept 'sum' / ('sum', col) / ('sum_prod', i, j) forms -> tuples."""
+    norm = []
+    for a in aggs:
+        if isinstance(a, str):
+            a = (a,) if a in ("count",) else (a, 0)
+        a = tuple(a)
+        kind = a[0]
+        if kind == "avg":
+            kind, a = "mean", ("mean", *a[1:])
+        if kind == "count":
+            a = ("count",)
+        elif kind == "sum_prod":
+            if len(a) != 3:
+                raise ValueError(f"sum_prod takes two columns, got {a!r}")
+        elif len(a) != 2:
+            raise ValueError(f"aggregate {a!r} takes exactly one column")
+        if kind not in AGG_KINDS:
+            raise ValueError(f"unknown aggregate {kind!r}; want {AGG_KINDS}")
+        norm.append(a)
+    return norm
+
+
+def agg_name(a) -> str:
+    """Canonical result key: 'sum(0)', 'count(*)', 'sum_prod(0,1)', ..."""
+    a = _normalize([a])[0]
+    if a[0] == "count":
+        return "count(*)"
+    return f"{a[0]}({','.join(str(c) for c in a[1:])})"
+
+
+def _compile(aggs):
+    """Compile aggregates to (names, accumulator columns, finalize plans).
+
+    Columns are deduplicated: ``[("mean", 0), ("var", 0)]`` shares the raw
+    column and the ones column, adding only the squares column.
+    """
+    norm = _normalize(aggs)
+    cols, index = [], {}
+
+    def need(c):
+        if c not in index:
+            index[c] = len(cols)
+            cols.append(c)
+        return index[c]
+
+    plans = []
+    for a in norm:
+        kind = a[0]
+        if kind == "sum":
+            plans.append(("sum", need(("col", a[1]))))
+        elif kind == "sum_prod":
+            plans.append(("sum", need(("prod", a[1], a[2]))))
+        elif kind == "count":
+            plans.append(("count", need(("ones",))))
+        elif kind == "mean":
+            plans.append(("mean", need(("col", a[1])), need(("ones",))))
+        elif kind in ("var", "std"):
+            plans.append((kind, need(("col", a[1])), need(("sq", a[1])),
+                          need(("ones",))))
+        else:  # min / max: exact as-is, no accumulator column
+            plans.append((kind, a[1]))
+    return [agg_name(a) for a in norm], cols, plans
+
+
+def _as_matrix(values, spec: ReproSpec):
+    v = jnp.asarray(values, spec.dtype)
+    if v.ndim == 1:
+        v = v[:, None]
+    if v.ndim != 2:
+        raise ValueError(f"groupby_agg expects values (n,) or (n, C), "
+                         f"got shape {v.shape}")
+    return v
+
+
+def _build_columns(v, cols, spec: ReproSpec):
+    """Materialize the stacked accumulator-column matrix (n, ncols)."""
+    parts = []
+    for c in cols:
+        if c[0] == "col":
+            parts.append(v[:, c[1]])
+        elif c[0] == "sq":
+            parts.append(v[:, c[1]] * v[:, c[1]])
+        elif c[0] == "prod":
+            parts.append(v[:, c[1]] * v[:, c[2]])
+        else:  # ("ones",)
+            parts.append(jnp.ones(v.shape[0], spec.dtype))
+    if not parts:
+        return jnp.zeros((v.shape[0], 0), spec.dtype)
+    return jnp.stack(parts, axis=1)
+
+
+def _minmax_cols(plans):
+    return sorted({p[1] for p in plans if p[0] in ("min", "max")})
+
+
+def _finalize_plans(names, plans, sums, mins, maxs, spec: ReproSpec):
+    """Derive every requested aggregate from the finalized table.
+
+    Fixed elementwise formulas — pure functions of reproducible inputs, so
+    the outputs inherit bit-reproducibility.  Empty groups yield NaN for
+    MEAN/VAR/STD (the reduction identity for MIN/MAX, 0 for SUM/COUNT).
+    """
+    nan = jnp.asarray(jnp.nan, spec.dtype)
+    out = {}
+    for name, p in zip(names, plans):
+        kind = p[0]
+        if kind in ("sum", "count"):
+            r = sums[:, p[1]]
+        elif kind == "mean":
+            s, cnt = sums[:, p[1]], sums[:, p[2]]
+            r = jnp.where(cnt > 0, s / jnp.where(cnt > 0, cnt, 1), nan)
+        elif kind in ("var", "std"):
+            s, s2, cnt = sums[:, p[1]], sums[:, p[2]], sums[:, p[3]]
+            safe = jnp.where(cnt > 0, cnt, 1)
+            mean = s / safe
+            r = jnp.maximum(s2 / safe - mean * mean, 0.0)  # population var
+            if kind == "std":
+                r = jnp.sqrt(r)
+            r = jnp.where(cnt > 0, r, nan)
+        elif kind == "min":
+            r = mins[p[1]]
+        else:
+            r = maxs[p[1]]
+        out[name] = r
+    return out
+
+
+def groupby_agg(values, keys, num_segments: int, aggs=("sum",),
+                spec: ReproSpec | None = None, method: str = "auto",
+                chunk: int | None = None, return_table: bool = False):
+    """Bit-reproducible multi-aggregate GROUPBY.
+
+    Args:
+      values:       float (n,) single column or (n, C) column matrix.
+      keys:         int32 (n,) in [0, num_segments) — the GROUP BY column.
+      num_segments: static group count G.
+      aggs:         aggregate requests: 'sum' | 'count' | 'mean' | 'var' |
+                    'std' | 'min' | 'max' (column 0), or tuples
+                    ('kind', col) / ('sum_prod', i, j).  'avg' aliases
+                    'mean'.
+      spec:         accumulator format; default ``ReproSpec()`` (f32, L=2).
+      method:       'auto' (cost-model planner) or an explicit strategy:
+                    'onehot' | 'scatter' | 'sort' | 'pallas'.
+      chunk:        summation-buffer size knob (clamped to safe bounds).
+      return_table: also return the raw accumulator table ``ReproAcc
+                    (G, ncols, L)`` (for exact cross-fragment merging).
+
+    Returns an ordered dict mapping canonical names (see :func:`agg_name`)
+    to finalized (G,) arrays; with ``return_table=True``, a
+    ``(results, table)`` pair.  Every output is bit-identical across
+    methods, row orderings, chunk sizes and shardings.
+    """
+    spec = spec or ReproSpec()
+    v = _as_matrix(values, spec)
+    keys = jnp.asarray(keys, jnp.int32).reshape(-1)
+    if v.shape[0] != keys.shape[0]:
+        raise ValueError("values and keys disagree on the row count")
+    names, cols, plans = _compile(aggs)
+    X = _build_columns(v, cols, spec)
+    ncols = X.shape[1]
+
+    table = None
+    if ncols:
+        plan = plan_groupby(int(X.shape[0]), num_segments, spec, ncols=ncols,
+                            method=method, chunk=chunk)
+        e1 = acc_mod.required_e1(X, spec, axis=0)            # per-column
+        table = aggregates.segment_table(X, keys, num_segments, spec,
+                                         method=plan.method, e1=e1,
+                                         chunk=plan.chunk)
+        sums = acc_mod.finalize(table, spec)                 # (G, ncols)
+    else:
+        sums = jnp.zeros((num_segments, 0), spec.dtype)
+
+    mins, maxs = {}, {}
+    for j in _minmax_cols(plans):
+        mins[j] = jax.ops.segment_min(v[:, j], keys, num_segments)
+        maxs[j] = jax.ops.segment_max(v[:, j], keys, num_segments)
+
+    out = _finalize_plans(names, plans, sums, mins, maxs, spec)
+    if return_table:
+        if table is None:
+            table = acc_mod.zeros(spec, (num_segments, 0))
+        return out, table
+    return out

@@ -1,0 +1,112 @@
+"""Cost-model planner for reproducible GROUPBY (DESIGN.md §10).
+
+Every execution path — jnp onehot / scatter / sort and the Pallas MXU kernel
+— returns bit-identical accumulator tables, so method choice is *purely* a
+performance decision.  This module makes that decision explicit: an abstract
+per-row cost for each candidate, derived from the same machine model the
+paper uses (summation-buffer residency, partitioning passes, SIMD width),
+replaces the old ad-hoc ``method == "auto"`` branch in ``core/segment.py``.
+
+The model, in per-row cost units (one vector op on one lane ~ 1):
+
+* every path pays extraction: L error-free transformations + an integer
+  conversion per level (``_EXTRACT_COST`` per level);
+* ``onehot`` adds a dense (block x G) accumulation: G multiply-adds per row
+  per level, spread over ``_LANES`` vector lanes;
+* ``pallas`` is the same matmul on the MXU systolic array
+  (``_LANES * _MXU_DEPTH`` MACs/cycle) — TPU backend + f32 accumulators only;
+* ``scatter`` pays a random access per level; the penalty quadruples once the
+  (G+1, ncols, L) int table spills the paper's summation-buffer budget
+  (``_CACHE_BYTES``);
+* ``sort`` pays a partitioning pass (2 log2 n per row) to restore locality,
+  keeping the in-cache scatter penalty at any group count — the paper's
+  PartitionAndAggregate (§V-B).
+
+Crossovers (f32, L=2, ncols=1): onehot wins up to G ~ 4096 on 128-lane
+hardware — the legacy heuristic, now derived — and G ~ 256 on CPU (the
+measured crossover in BENCH_groupby.json); sort overtakes scatter once the
+table spills (G ~ 2^19); on TPU the Pallas kernel holds to G ~ 2^18.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+
+from repro.core.aggregates import (  # noqa: F401  (re-exports)
+    default_chunk, onehot_block_bound, pad_and_chunk, scatter_chunk_bound)
+from repro.core.types import ReproSpec
+
+__all__ = [
+    "GroupbyPlan", "plan_groupby", "default_chunk", "onehot_block_bound",
+    "scatter_chunk_bound", "pad_and_chunk", "METHODS",
+]
+
+METHODS = ("onehot", "scatter", "sort", "pallas")
+
+_LANES = 128          # TPU VPU lane width
+_CPU_LANES = 8        # effective XLA:CPU one-hot throughput (measured:
+                      # BENCH_groupby.json puts the onehot/scatter crossover
+                      # near G~10^2 on CPU vs ~4096 on 128-lane hardware)
+_MXU_DEPTH = 64       # extra MAC throughput of the 128x128 systolic array
+_EXTRACT_COST = 4.0   # EFT + scale-to-int, per row per level
+_SCATTER_COST = 32.0  # random table access, per row per level, in cache
+_SPILL_FACTOR = 4.0   # penalty multiplier once the table leaves the cache
+_CACHE_BYTES = 1 << 24
+
+
+def _clamp_chunk(method: str, chunk: int, spec: ReproSpec) -> int:
+    if method in ("onehot", "pallas"):
+        return min(chunk, onehot_block_bound(spec))
+    return min(chunk, scatter_chunk_bound(spec))
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupbyPlan:
+    """An executable dispatch decision: strategy + buffer size + rationale."""
+
+    method: str          # 'onehot' | 'scatter' | 'sort' | 'pallas'
+    chunk: int           # rows per block between renormalizations
+    cost: float          # modeled per-row cost (0.0 for explicit requests)
+    reason: str          # one line of cost-model rationale
+
+
+def plan_groupby(n: int, num_segments: int, spec: ReproSpec, ncols: int = 1,
+                 backend: str | None = None, method: str = "auto",
+                 chunk: int | None = None) -> GroupbyPlan:
+    """Choose an execution strategy for an (n rows, G groups, ncols columns)
+    reproducible GROUPBY.  Deterministic in its arguments; any choice is
+    bit-compatible with any other, so this is purely a throughput decision.
+    """
+    if backend is None:
+        backend = jax.default_backend()
+    if method != "auto":
+        if method not in METHODS:
+            raise ValueError(f"unknown method {method!r}; want one of "
+                             f"{('auto',) + METHODS}")
+        c = _clamp_chunk(method, chunk or default_chunk(method, spec), spec)
+        return GroupbyPlan(method, c, 0.0, "explicit request")
+
+    extract = _EXTRACT_COST * spec.L
+    table_bytes = (num_segments + 1) * ncols * spec.L * 2 * 4
+    in_cache = table_bytes <= _CACHE_BYTES
+    lanes = _LANES if backend == "tpu" else _CPU_LANES
+    costs = {
+        "onehot": extract + spec.L * num_segments / lanes,
+        "scatter": extract + spec.L * _SCATTER_COST *
+        (1.0 if in_cache else _SPILL_FACTOR),
+        "sort": 2.0 * math.log2(max(n, 2)) + extract +
+        spec.L * _SCATTER_COST,
+    }
+    if backend == "tpu" and spec.m <= 30:
+        costs["pallas"] = extract + \
+            spec.L * num_segments / (_LANES * _MXU_DEPTH)
+    best = min(costs, key=costs.get)
+    reason = (f"cost model: {best}={costs[best]:.1f}/row over "
+              + ", ".join(f"{m}={c:.1f}" for m, c in sorted(costs.items())
+                          if m != best)
+              + f" (G={num_segments}, n={n}, ncols={ncols}, "
+              f"table {'fits' if in_cache else 'spills'} cache, {backend})")
+    c = _clamp_chunk(best, chunk or default_chunk(best, spec), spec)
+    return GroupbyPlan(best, c, costs[best], reason)

@@ -1,0 +1,111 @@
+"""Sharded reproducible GROUPBY: per-shard tables + exact collective merge.
+
+The paper merges per-thread private hash tables into a shared table with the
+exact accumulator ``operator+=`` — schedule-independent because the merge is
+integer arithmetic.  This module is the multi-device analogue (DESIGN.md §5
+and §10): rows are sharded over a mesh axis, each shard aggregates its slice
+into a local accumulator table with :func:`segment_table`, and the tables
+merge with :func:`repro_psum` — an integer all-reduce, hence exact and
+associative over any reduction topology.
+
+Bit-identity across mesh shapes rests on two facts:
+
+* the lattice exponents are agreed globally *before* extraction: each shard
+  takes a ``pmax`` of its per-column e1, and because the lattice snap is
+  monotone, ``pmax(required_e1(shard)) == required_e1(whole input)`` — every
+  mesh extracts on the very lattice a single device would use;
+* everything after extraction is integer (table psum) or exactly associative
+  (MIN/MAX via ``pmin``/``pmax``), and the finalizer is a pure function.
+
+Shanmugavelu et al. show non-associative collective reductions breaking
+run-to-run reproducibility in HPC/DL workloads; this operator is the
+RDBMS-side answer — ``sharded_groupby_agg(..., mesh_4x1)`` equals
+``groupby_agg(...)`` on one device, bit for bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import accumulator as acc_mod
+from repro.core import aggregates, collectives
+from repro.core.types import ReproSpec
+from repro.ops.groupby import (_build_columns, _compile, _finalize_plans,
+                               _as_matrix, _minmax_cols)
+from repro.ops.plan import plan_groupby
+
+__all__ = ["sharded_groupby_agg"]
+
+
+def sharded_groupby_agg(values, keys, num_segments: int, aggs=("sum",),
+                        spec: ReproSpec | None = None, mesh=None,
+                        axis_name: str = "data", method: str = "auto",
+                        chunk: int | None = None):
+    """Multi-device :func:`repro.ops.groupby_agg` over a row-sharded table.
+
+    Args:
+      values/keys/num_segments/aggs/spec/method/chunk: as in
+        :func:`groupby_agg`.
+      mesh:      mesh to shard rows over; default 1-D mesh of every device.
+      axis_name: mesh axis carrying the rows.
+
+    Rows are padded to the shard count with a dump group that is sliced off
+    after the merge, so any device count accepts any row count.  Returns the
+    same dict as :func:`groupby_agg`, replicated; bit-identical to the
+    single-device result for every mesh shape.
+    """
+    spec = spec or ReproSpec()
+    v = _as_matrix(values, spec)
+    keys = jnp.asarray(keys, jnp.int32).reshape(-1)
+    if v.shape[0] != keys.shape[0]:
+        raise ValueError("values and keys disagree on the row count")
+    if mesh is None:
+        mesh = jax.make_mesh((jax.device_count(),), (axis_name,))
+    nshards = mesh.shape[axis_name]
+
+    names, cols, plans = _compile(aggs)
+    X = _build_columns(v, cols, spec)
+    mm = _minmax_cols(plans)
+    M = (jnp.stack([v[:, j] for j in mm], axis=1) if mm
+         else jnp.zeros((v.shape[0], 0), spec.dtype))
+
+    # pad rows to the shard count; extra rows land in a dump group G
+    nseg1 = num_segments + 1
+    pad = (-X.shape[0]) % nshards
+    if pad:
+        X = jnp.concatenate([X, jnp.zeros((pad, X.shape[1]), X.dtype)])
+        M = jnp.concatenate([M, jnp.zeros((pad, M.shape[1]), M.dtype)])
+        keys = jnp.concatenate(
+            [keys, jnp.full(pad, num_segments, jnp.int32)])
+
+    plan = plan_groupby(int(X.shape[0]) // nshards, nseg1, spec,
+                        ncols=max(X.shape[1], 1), method=method, chunk=chunk)
+
+    def local(x_s, id_s, m_s):
+        if x_s.shape[1]:
+            e1 = acc_mod.required_e1(x_s, spec, axis=0)      # (ncols,)
+            e1 = lax.pmax(e1, axis_name)  # global lattice before extraction
+            tab = aggregates.segment_table(x_s, id_s, nseg1, spec,
+                                           method=plan.method, e1=e1,
+                                           chunk=plan.chunk)
+            tab = collectives.repro_psum(tab, spec, (axis_name,))
+            sums = acc_mod.finalize(tab, spec)               # (G+1, ncols)
+        else:
+            sums = jnp.zeros((nseg1, 0), spec.dtype)
+        mins = lax.pmin(jax.ops.segment_min(m_s, id_s, nseg1), axis_name)
+        maxs = lax.pmax(jax.ops.segment_max(m_s, id_s, nseg1), axis_name)
+        return sums, mins, maxs
+
+    fn = compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name), P(axis_name)),
+        out_specs=(P(), P(), P()), axis_names={axis_name})
+    sums, mins, maxs = jax.jit(fn)(X, keys, M)
+
+    sums = sums[:num_segments]
+    mins = {j: mins[:num_segments, i] for i, j in enumerate(mm)}
+    maxs = {j: maxs[:num_segments, i] for i, j in enumerate(mm)}
+    return _finalize_plans(names, plans, sums, mins, maxs, spec)

@@ -1,0 +1,43 @@
+"""Subprocess helper: prove mesh-shape invariance of the sharded GROUPBY.
+
+Run as:  python tests/_groupby_shard_check.py <ndev>
+
+Forces <ndev> CPU devices, runs ``sharded_groupby_agg`` on a fixed dataset
+over a 1-D mesh, and prints each finalized aggregate's raw bytes (hex).
+The parent test asserts the hex is identical across device counts — the
+paper's reproducibility contract extended to the full aggregate family
+under data-parallel sharding.
+"""
+import os
+import sys
+
+ndev = int(sys.argv[1])
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.types import ReproSpec  # noqa: E402
+from repro.ops import sharded_groupby_agg  # noqa: E402
+
+assert jax.device_count() == ndev, jax.devices()
+
+SPEC = ReproSpec(dtype=jnp.float32, L=2)
+N, G = 10_007, 23     # deliberately not divisible by any device count
+
+rng = np.random.default_rng(42)
+vals = np.stack([
+    rng.standard_normal(N) * np.exp(rng.standard_normal(N) * 3),
+    rng.lognormal(2.0, 1.5, N),
+], axis=1).astype(np.float32)
+keys = rng.integers(0, G, N).astype(np.int32)
+
+AGGS = [("sum", 0), ("count",), ("mean", 0), ("var", 1), ("std", 1),
+        ("sum_prod", 0, 1), ("min", 0), ("max", 1)]
+
+out = sharded_groupby_agg(vals, keys, G, AGGS, SPEC)
+for name in sorted(out):
+    print(name, np.asarray(out[name]).tobytes().hex())

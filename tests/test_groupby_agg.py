@@ -1,0 +1,205 @@
+"""Tests for the unified reproducible GROUPBY engine (repro.ops).
+
+The acceptance contract: ``groupby_agg`` returns bit-identical finalized
+results for every aggregate across all four execution methods, row
+permutations, chunk sizes, and 1-device vs forced-4-device sharding, while
+the legacy ``segment_rsum`` API keeps working as a thin wrapper.
+"""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accumulator as acc_mod
+from repro.core import segment
+from repro.core.aggregates import pad_and_chunk, segment_table
+from repro.core.types import ReproSpec
+from repro.kernels.segment_rsum.ops import segment_agg_kernel
+from repro.ops import groupby_agg, plan_groupby
+from repro.ops.plan import METHODS, default_chunk, onehot_block_bound
+
+SPEC = ReproSpec(dtype=jnp.float32, L=2)
+ALL_AGGS = [("sum", 0), ("count",), ("mean", 0), ("var", 1), ("std", 1),
+            ("sum_prod", 0, 1), ("min", 0), ("max", 1)]
+
+
+def _data(n, g, seed=0):
+    rng = np.random.default_rng(seed)
+    vals = np.stack([
+        rng.standard_normal(n) * np.exp(rng.standard_normal(n) * 2),
+        rng.lognormal(1.0, 1.5, n),
+    ], axis=1).astype(np.float32)
+    ids = rng.integers(0, g, n).astype(np.int32)
+    return vals, ids
+
+
+def _assert_same(ref, got):
+    assert list(ref) == list(got)
+    for key in ref:
+        np.testing.assert_array_equal(np.asarray(ref[key]),
+                                      np.asarray(got[key]), err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance sweep: method x ordering x chunk, every aggregate, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+def test_every_aggregate_bitwise_across_methods(method):
+    vals, ids = _data(4097, 33, seed=1)           # odd n forces padding
+    ref = groupby_agg(vals, ids, 33, ALL_AGGS, SPEC, method="scatter")
+    got = groupby_agg(vals, ids, 33, ALL_AGGS, SPEC, method=method)
+    _assert_same(ref, got)
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("chunk", [64, 1024])
+def test_permutation_and_chunk_invariance_bitwise(method, chunk):
+    vals, ids = _data(3001, 17, seed=2)
+    ref = groupby_agg(vals, ids, 17, ALL_AGGS, SPEC, method="scatter")
+    perm = np.random.default_rng(3).permutation(len(ids))
+    got = groupby_agg(vals[perm], ids[perm], 17, ALL_AGGS, SPEC,
+                      method=method, chunk=chunk)
+    _assert_same(ref, got)
+
+
+def test_planner_auto_matches_explicit_bitwise():
+    vals, ids = _data(2048, 9, seed=4)
+    ref = groupby_agg(vals, ids, 9, ALL_AGGS, SPEC, method="sort")
+    got = groupby_agg(vals, ids, 9, ALL_AGGS, SPEC)       # planner decides
+    _assert_same(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# cross-path: planner output == Pallas kernel == jnp reference for MEAN/VAR
+# ---------------------------------------------------------------------------
+
+def test_mean_var_cross_path_bitwise():
+    vals, ids = _data(5000, 21, seed=5)
+    aggs = [("mean", 0), ("var", 0)]
+    planned = groupby_agg(vals, ids, 21, aggs, SPEC)
+    pallas = groupby_agg(vals, ids, 21, aggs, SPEC, method="pallas")
+    # jnp reference: the same derived formulas over independent segment_rsum
+    # sums (each column on its own lattice, like the fused engine)
+    x = vals[:, 0]
+    s = acc_mod.finalize(segment.segment_rsum(x, ids, 21, SPEC), SPEC)
+    s2 = acc_mod.finalize(segment.segment_rsum(x * x, ids, 21, SPEC), SPEC)
+    cnt = acc_mod.finalize(
+        segment.segment_rsum(np.ones_like(x), ids, 21, SPEC), SPEC)
+    safe = jnp.where(cnt > 0, cnt, 1)
+    mean = s / safe
+    var = jnp.maximum(s2 / safe - mean * mean, 0.0)
+    _assert_same(planned, pallas)
+    np.testing.assert_array_equal(np.asarray(planned["mean(0)"]),
+                                  np.asarray(mean))
+    np.testing.assert_array_equal(np.asarray(planned["var(0)"]),
+                                  np.asarray(var))
+
+
+def test_fused_kernel_matches_table_oracle_bitwise():
+    vals, ids = _data(4000, 65, seed=6)
+    e1 = acc_mod.required_e1(jnp.asarray(vals), SPEC, axis=0)
+    want = segment_table(vals, ids, 65, SPEC, method="onehot", e1=e1)
+    got = segment_agg_kernel(vals, ids, 65, SPEC, e1=e1, interpret=True)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# sharding: 1 device vs forced 4-way CPU mesh, asserted bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_groupby_device_count_invariance():
+    """sharded_groupby_agg over a forced 4-way CPU mesh must equal the
+    1-device run byte for byte (subprocesses so XLA_FLAGS can differ)."""
+    script = os.path.join(os.path.dirname(__file__),
+                          "_groupby_shard_check.py")
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    outs = {}
+    for n in (1, 4):
+        res = subprocess.run([sys.executable, script, str(n)],
+                             capture_output=True, text=True, env=env,
+                             timeout=600)
+        assert res.returncode == 0, res.stderr[-2000:]
+        outs[n] = res.stdout
+    assert outs[1] == outs[4] and outs[1].strip()
+
+
+# ---------------------------------------------------------------------------
+# planner, helpers, legacy wrapper
+# ---------------------------------------------------------------------------
+
+def test_planner_cost_model_dispatch():
+    small = plan_groupby(10**6, 64, SPEC)
+    mid = plan_groupby(10**6, 1 << 14, SPEC)
+    huge = plan_groupby(10**6, 1 << 20, SPEC)
+    assert small.method == "onehot"
+    assert mid.method == "scatter"
+    assert huge.method == "sort"
+    assert "cost model" in small.reason
+    on_tpu = plan_groupby(10**6, 1 << 12, SPEC, backend="tpu")
+    assert on_tpu.method == "pallas"
+    # f64 accumulators never plan onto the f32-only Pallas kernel
+    f64 = ReproSpec(dtype=jnp.float64, L=2)
+    assert plan_groupby(10**6, 1 << 12, f64, backend="tpu").method != "pallas"
+
+
+def test_planner_explicit_method_and_chunk_clamp():
+    p = plan_groupby(1000, 8, SPEC, method="onehot", chunk=10**9)
+    assert p.method == "onehot"
+    assert p.chunk == onehot_block_bound(SPEC)
+    assert p.reason == "explicit request"
+    with pytest.raises(ValueError):
+        plan_groupby(1000, 8, SPEC, method="nope")
+    assert plan_groupby(1000, 8, SPEC, method="sort").chunk == \
+        default_chunk("sort", SPEC)
+
+
+def test_pad_and_chunk_shared_helper():
+    v = jnp.arange(10, dtype=jnp.float32)
+    ids = jnp.arange(10, dtype=jnp.int32)
+    vc, ic = pad_and_chunk(v, 4, ids, dump_id=-1)
+    assert vc.shape == (3, 4) and ic.shape == (3, 4)
+    assert int(ic[-1, -1]) == -1 and float(vc[-1, -1]) == 0.0
+    assert pad_and_chunk(v, 5).shape == (2, 5)    # ids-less form
+
+
+def test_legacy_segment_rsum_is_thin_wrapper():
+    vals, ids = _data(2000, 12, seed=7)
+    x = vals[:, 0]
+    old = segment.segment_rsum(x, ids, 12, SPEC, method="onehot")
+    new = groupby_agg(x, ids, 12, ["sum"], SPEC, method="onehot")
+    np.testing.assert_array_equal(
+        np.asarray(acc_mod.finalize(old, SPEC)), np.asarray(new["sum(0)"]))
+    auto = segment.segment_rsum(x, ids, 12, SPEC)  # planner-backed auto
+    for a, b in zip(auto, old):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_groupby_agg_numerics_and_empty_groups():
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal(512).astype(np.float32)
+    ids = rng.integers(0, 4, 512).astype(np.int32)
+    out = groupby_agg(x, ids, 6, ["sum", "count", "mean", "var", "min"],
+                      SPEC)
+    ref_cnt = np.bincount(ids, minlength=6)
+    np.testing.assert_array_equal(np.asarray(out["count(*)"]),
+                                  ref_cnt.astype(np.float32))
+    ref_sum = np.zeros(6)
+    np.add.at(ref_sum, ids, x.astype(np.float64))
+    np.testing.assert_allclose(np.asarray(out["sum(0)"]), ref_sum,
+                               rtol=1e-5, atol=1e-5)
+    for g in range(4):
+        np.testing.assert_allclose(float(out["var(0)"][g]),
+                                   np.var(x[ids == g].astype(np.float64)),
+                                   rtol=1e-3)
+        assert float(out["min(0)"][g]) == x[ids == g].min()
+    # groups 4 and 5 are empty: NaN mean/var, 0 sums, +inf min identity
+    assert np.all(np.isnan(np.asarray(out["mean(0)"][4:])))
+    assert np.all(np.isnan(np.asarray(out["var(0)"][4:])))
+    assert np.all(np.asarray(out["sum(0)"][4:]) == 0)
+    assert np.all(np.isposinf(np.asarray(out["min(0)"][4:])))

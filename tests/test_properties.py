@@ -9,11 +9,17 @@ import math
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
 
-from repro.core import accumulator as acc_mod
-from repro.core import segment as seg_mod
-from repro.core.types import ReproSpec
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional dev dependency 'hypothesis' "
+           "(pip install repro[dev])")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402,E501
+
+from repro.core import accumulator as acc_mod  # noqa: E402
+from repro.core import segment as seg_mod  # noqa: E402
+from repro.core.types import ReproSpec  # noqa: E402
+from repro.ops import groupby_agg  # noqa: E402
 
 SPEC = ReproSpec(dtype=jnp.float32, L=2)
 
@@ -130,3 +136,28 @@ def test_single_value_roundtrip(v):
     # e1 <= E + m - W + 1 + W  =>  |err| <= 2^(E - W)  ~ |v| * 2^-W * 2
     assert abs(got2 - float(x[0])) <= abs(float(x[0])) * 2.0 ** (-SPEC.W + 7) \
         + 1e-45
+
+
+@given(st.lists(_safe_floats(), min_size=1, max_size=40),
+       st.lists(st.integers(min_value=0, max_value=4), min_size=1,
+                max_size=40),
+       st.sampled_from([64, 256, 4096]),
+       st.randoms(use_true_random=False))
+@_settings
+def test_groupby_agg_universal_bit_identity(xs, ids, chunk, rnd):
+    """The full aggregate family is bit-identical across method x ordering
+    x chunk size — the paper's reproducibility contract extended from SUM."""
+    n = min(len(xs), len(ids))
+    x = np.array(xs[:n], np.float32)
+    i = np.array(ids[:n], np.int32)
+    aggs = ["sum", "count", "mean", "var", "std", "min", "max"]
+    ref = groupby_agg(x, i, 5, aggs, SPEC, method="scatter")
+    perm = list(range(n))
+    rnd.shuffle(perm)
+    perm = np.array(perm)
+    for method in ("onehot", "sort", "scatter"):
+        got = groupby_agg(x[perm], i[perm], 5, aggs, SPEC, method=method,
+                          chunk=chunk)
+        for key in ref:
+            np.testing.assert_array_equal(np.asarray(ref[key]),
+                                          np.asarray(got[key]), err_msg=key)
