@@ -11,8 +11,15 @@ import numpy as np
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
-def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall-time of a jitted callable (block_until_ready)."""
+def timeit(fn, *args, warmup: int = 2, iters: int = 5,
+           reduce: str = "median") -> float:
+    """Wall-time of a jitted callable (block_until_ready).
+
+    ``reduce`` is 'median' (default, robust for long-running cells) or
+    'min' (best-of-N — the standard microbenchmark estimator: system noise
+    only ever adds time, so the minimum is the least-biased throughput
+    figure and slowdown *ratios* of minima are far more stable).
+    """
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -22,7 +29,7 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
         out = fn(*args)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return float(np.min(ts) if reduce == "min" else np.median(ts))
 
 
 def ns_per_elem(seconds: float, n: int) -> float:

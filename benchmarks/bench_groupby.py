@@ -2,16 +2,29 @@
 the unified engine (`groupby_agg`) on a TPC-H-Q1-shaped workload.
 
 Part 1 (``run``) compares float32 (non-reproducible baseline), DECIMAL, and
-the repro strategies (scatter = drop-in §IV; sort = PartitionAndAggregate
-§V; onehot = MXU summation-buffer fast path) across n_groups, reporting
-slowdown vs float32 and the geometric-mean slowdown (Table III analogue).
+the repro strategies (scatter = drop-in §IV; sort = radix
+PartitionAndAggregate §V-B, counting-sort on the low group-id bits; onehot =
+MXU summation-buffer fast path) across a Fig. 7-style group-count sweep
+(G = 2^2 .. 2^20), reporting slowdown vs float32 and the geometric-mean
+slowdown (Table III analogue).
 
 Part 2 (``run_agg``) benchmarks the multi-aggregate engine across planner
 paths on the Q1 shape from examples/groupby_analytics.py — SUM x3, AVG x3,
 COUNT over 6 groups — against (a) the float32 multi-pass baseline and
 (b) an unfused repro path (one segment_rsum per accumulator column),
-showing what the fused table buys.  Results land in BENCH_groupby.json at
-the repo root.
+showing what the fused table buys.
+
+Part 3 (``run_levels``) measures the exponent-prescan level pruning
+(DESIGN.md §11): narrow-dynamic-range data on an L=4 accumulator needs only
+2 live levels, and the pruned table is bit-identical to the full one.
+
+``cross_check`` is the CI gate: every path (radix partitions, level-pruned
+variants, the Pallas kernel in interpret mode, row permutations) must
+reproduce the seed scatter table bit for bit; any mismatch fails the
+process, so the benchmark lane doubles as a bitwise acceptance sweep.
+Results land in BENCH_groupby.json at the repo root.  ``--autotune`` first
+runs the measured autotuner (repro/ops/calibrate.py) so the planner rows
+reflect calibrated rather than modeled costs.
 """
 from __future__ import annotations
 
@@ -27,33 +40,68 @@ import numpy as np
 
 from benchmarks._util import keys, ns_per_elem, save_results, timeit, uniform
 from repro.core import accumulator as acc_mod
+from repro.core import prescan
 from repro.core import segment as seg_mod
+from repro.core.aggregates import radix_buckets, radix_table, segment_table
 from repro.core.types import ReproSpec
 from repro.numerics import DecimalSpec, decimal_segment_sum
 from repro.ops import groupby_agg, plan_groupby
+from repro.ops import calibrate as cal_mod
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_groupby.json")
 
 
+def _geomean(rows, key):
+    xs = [r[key] for r in rows if r.get(key)]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else None
+
+
+def _ab_slowdown(fn, base, *args, rounds: int = 3, iters: int = 2) -> float:
+    """Interleaved A/B slowdown: alternate (base, fn) timing rounds and
+    ratio the minima.  On a noisy shared machine this is far more stable
+    than timing each side once in isolation — load spikes hit both sides,
+    and the min discards them."""
+    tb, tf = [], []
+    for _ in range(rounds):
+        tb.append(timeit(base, *args, warmup=1, iters=iters, reduce="min"))
+        tf.append(timeit(fn, *args, warmup=1, iters=iters, reduce="min"))
+    return min(tf) / min(tb)
+
+
 def run(quick: bool = True):
+    """Fig. 7 sweep.  The first four group counts are the historical
+    comparison points feeding ``fig7_summary`` (kept fixed so its geomeans
+    stay comparable across the trajectory); the remaining sweep points
+    extend to G = 2^20 and feed the separate ``fig7_sweep`` geomeans, where
+    the sort->radix win at large G is visible."""
     n = 2**17 if quick else 2**22
-    group_counts = [2**k for k in (2, 6, 10, 14)] if quick else \
-        [2**k for k in range(2, 21, 2)]
+    summary_counts = [2**k for k in (2, 6, 10, 14)]
+    sweep_counts = summary_counts + (
+        [2**k for k in (17, 20)] if quick else
+        [2**k for k in range(16, 21, 2)])
     vals = jnp.asarray(uniform(n, seed=4))
     spec = ReproSpec(dtype=jnp.float32, L=2)
+
+    # one throwaway shape first so process-wide warmup (thread pools, XLA
+    # autotuning) is not billed to the first measured point
+    w_ids = jnp.asarray(keys(n, 16, seed=0))
+    timeit(jax.jit(lambda v, i: jax.ops.segment_sum(v, i, num_segments=16)),
+           vals, w_ids, iters=1)
+
     rows = []
-    for g in group_counts:
+    for g in sweep_counts:
         ids = jnp.asarray(keys(n, g, seed=g))
         base = jax.jit(
             lambda v, i: jax.ops.segment_sum(v, i, num_segments=g))
-        t_base = timeit(base, vals, ids, iters=3)
-        row = {"n_groups": g, "float32_ns": ns_per_elem(t_base, n)}
+        t_base = timeit(base, vals, ids, iters=5, reduce="min")
+        row = {"n_groups": g, "float32_ns": ns_per_elem(t_base, n),
+               "sort_buckets": radix_buckets(g, 1, spec)}
 
         d = DecimalSpec(precision=9, scale=4)
         f = jax.jit(functools.partial(decimal_segment_sum, num_segments=g,
                                       dspec=d))
-        row["decimal9_slowdown"] = timeit(f, vals, ids, iters=3) / t_base
+        row["decimal9_slowdown"] = _ab_slowdown(f, base, vals, ids)
 
         for method in ("scatter", "sort", "onehot"):
             if method == "onehot" and g > 2**12:
@@ -62,28 +110,31 @@ def run(quick: bool = True):
             f = jax.jit(functools.partial(
                 seg_mod.segment_rsum, num_segments=g, spec=spec,
                 method=method))
-            row[f"{method}_slowdown"] = timeit(f, vals, ids, iters=3) / t_base
+            row[f"{method}_slowdown"] = _ab_slowdown(f, base, vals, ids)
         rows.append(row)
 
-    def geomean(key):
-        xs = [r[key] for r in rows if r.get(key)]
-        return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else None
-
-    summary = {f"geomean_{m}": geomean(f"{m}_slowdown")
+    head = [r for r in rows if r["n_groups"] in summary_counts]
+    summary = {f"geomean_{m}": _geomean(head, f"{m}_slowdown")
                for m in ("scatter", "sort", "onehot", "decimal9")}
+    sweep = {f"geomean_{m}": _geomean(rows, f"{m}_slowdown")
+             for m in ("scatter", "sort", "decimal9")}
 
     print("\n== Fig. 7/10 analogue: GROUPBY slowdown vs float32 ==")
     print(f"{'groups':>8} {'f32 ns/el':>10} {'decimal':>8} {'scatter':>8} "
-          f"{'sort':>8} {'onehot':>8}")
+          f"{'sort':>8} {'onehot':>8} {'B':>4}")
     for r in rows:
         fmt = lambda v: f"{v:8.2f}" if v else "       -"
         print(f"{r['n_groups']:>8} {r['float32_ns']:>10.2f} "
               f"{fmt(r['decimal9_slowdown'])} {fmt(r['scatter_slowdown'])} "
-              f"{fmt(r['sort_slowdown'])} {fmt(r['onehot_slowdown'])}")
+              f"{fmt(r['sort_slowdown'])} {fmt(r['onehot_slowdown'])} "
+              f"{r['sort_buckets']:>4}")
     print("Table III analogue (geomean slowdown):",
           {k: round(v, 2) for k, v in summary.items() if v})
-    save_results("groupby", {"rows": rows, "summary": summary})
-    return rows, summary
+    print("full-sweep geomeans (incl. large G):",
+          {k: round(v, 2) for k, v in sweep.items() if v})
+    save_results("groupby", {"rows": rows, "summary": summary,
+                             "sweep": sweep})
+    return rows, summary, sweep
 
 
 # ---------------------------------------------------------------------------
@@ -152,14 +203,113 @@ def run_agg(quick: bool = True):
     for k in sorted(rows):
         if k.endswith("_slowdown"):
             print(f"  {k:34} {rows[k]:6.2f}x")
-    print(f"  planner: {rows['plan']['method']} ({rows['plan']['reason']})")
+    print(f"  planner: {rows['plan']['method']} [{rows['plan']['source']}] "
+          f"({rows['plan']['reason']})")
     return rows
 
 
-def emit_bench_json(quick: bool = True):
-    _, fig7_summary = run(quick=quick)   # full rows: benchmarks/results/
+# ---------------------------------------------------------------------------
+# Part 3: exponent-prescan level pruning (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def run_levels(quick: bool = True):
+    """Narrow-range data on a deep accumulator: L_eff < L pays off."""
+    n, g = (2**17, 1024) if quick else (2**20, 1024)
+    spec = ReproSpec(dtype=jnp.float32, L=4)
+    vals = jnp.asarray(uniform(n, seed=9))[:, None]        # U[1,2): ~2 levels
+    ids = jnp.asarray(keys(n, g, seed=13))
+    e1 = acc_mod.required_e1(vals, spec, axis=0)
+    window = prescan.static_window(vals, e1, spec)
+    out = {"spec": f"float32/L{spec.L}/W{spec.W}", "n": n, "n_groups": g,
+           "window": list(window)}
+    for method in ("scatter", "onehot"):
+        full = jax.jit(functools.partial(
+            segment_table, num_segments=g, spec=spec, method=method,
+            e1=e1, levels=None))
+        pruned = jax.jit(functools.partial(
+            segment_table, num_segments=g, spec=spec, method=method,
+            e1=e1, levels=window))
+        t_f = timeit(full, vals, ids, iters=3)
+        t_p = timeit(pruned, vals, ids, iters=3)
+        out[f"{method}_full_ns"] = ns_per_elem(t_f, n)
+        out[f"{method}_pruned_ns"] = ns_per_elem(t_p, n)
+        out[f"{method}_speedup"] = t_f / t_p
+
+    print(f"\n== level pruning: L={spec.L}, live window {window} ==")
+    for method in ("scatter", "onehot"):
+        print(f"  {method:8} {out[f'{method}_full_ns']:8.2f} -> "
+              f"{out[f'{method}_pruned_ns']:8.2f} ns/el "
+              f"({out[f'{method}_speedup']:.2f}x)")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the bitwise cross-check gate (run by the CI bench lane)
+# ---------------------------------------------------------------------------
+
+def cross_check():
+    """Every execution path must reproduce the seed scatter table bit for
+    bit: radix partitions (several fan-outs), level-pruned variants, the
+    Pallas kernel (interpret mode), and row permutations.  Raises on any
+    mismatch, which fails the benchmark lane."""
+    from repro.kernels.segment_rsum.ops import segment_agg_kernel
+
+    rng = np.random.default_rng(7)
+    n, g = 20001, 129
+    spec = ReproSpec(dtype=jnp.float32, L=3)
+    vals = np.stack([
+        rng.standard_normal(n) * np.exp(rng.standard_normal(n) * 4),
+        rng.random(n) + 1.0,
+    ], 1).astype(np.float32)
+    vals[::101] = 0.0
+    vals[3::907] = 1e-41                                   # denormals
+    ids = rng.integers(0, g, n).astype(np.int32)
+    e1 = acc_mod.required_e1(jnp.asarray(vals), spec, axis=0)
+    window = prescan.static_window(jnp.asarray(vals), e1, spec)
+
+    ref = segment_table(vals, ids, g, spec, method="scatter", e1=e1)
+
+    def check(name, acc):
+        for a, b in zip(ref, acc):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"cross-check: {name}")
+
+    for method in ("sort", "radix", "onehot"):
+        check(method, segment_table(vals, ids, g, spec, method=method, e1=e1))
+    for buckets in (2, 8, 64):
+        k, C = radix_table(jnp.asarray(vals), jnp.asarray(ids), g, spec, e1,
+                           chunk=1024, num_buckets=buckets)
+        check(f"radix B={buckets}", (k, C, ref.e1))
+    for method in ("scatter", "onehot"):
+        check(f"pruned {method} {window}",
+              segment_table(vals, ids, g, spec, method=method, e1=e1,
+                            levels=window, chunk_skip=True))
+    check("pallas interpret",
+          segment_agg_kernel(vals, ids, g, spec, e1=e1, interpret=True,
+                             levels=window))
+    perm = rng.permutation(n)
+    check("permuted rows",
+          segment_table(vals[perm], ids[perm], g, spec, method="radix",
+                        e1=e1))
+    print("bitwise cross-check OK (radix, pruned, pallas, permutation)")
+    return "ok"
+
+
+def emit_bench_json(quick: bool = True, autotune: bool = False):
+    check = cross_check()                  # fail fast, before any timing
+    if autotune:
+        cal = cal_mod.calibrate(ReproSpec(dtype=jnp.float32, L=2),
+                                quick=quick)
+        print(f"autotuned: {len(cal.points)} calibration points -> "
+              f"{cal_mod.cache_path()}")
+    rows, fig7_summary, sweep = run(quick=quick)  # rows: benchmarks/results/
     agg_rows = run_agg(quick=quick)
-    payload = {"fig7_summary": fig7_summary, "groupby_agg": agg_rows}
+    level_rows = run_levels(quick=quick)
+    payload = {"fig7_summary": fig7_summary,
+               "fig7_sweep": {"group_counts": [r["n_groups"] for r in rows],
+                              **sweep},
+               "groupby_agg": agg_rows,
+               "level_pruning": level_rows, "cross_check": check}
     with open(BENCH_JSON, "w") as fh:
         json.dump(payload, fh, indent=1)
     print("wrote", os.path.abspath(BENCH_JSON))
@@ -168,4 +318,5 @@ def emit_bench_json(quick: bool = True):
 
 if __name__ == "__main__":
     import sys
-    emit_bench_json(quick="--quick" in sys.argv)
+    emit_bench_json(quick="--quick" in sys.argv,
+                    autotune="--autotune" in sys.argv)

@@ -30,7 +30,9 @@ def axis_size(axis_name) -> int:
     ``jax.core.axis_frame``)."""
     if hasattr(jax.lax, "axis_size"):
         return jax.lax.axis_size(axis_name)
-    return jax.core.axis_frame(axis_name)
+    # depending on version, axis_frame returns the size itself or a frame
+    frame = jax.core.axis_frame(axis_name)
+    return getattr(frame, "size", frame)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,

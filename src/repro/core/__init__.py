@@ -6,5 +6,6 @@ from repro.core.accumulator import (  # noqa: F401
 )
 from repro.core.segment import segment_rsum  # noqa: F401
 from repro.core.aggregates import segment_table, pad_and_chunk  # noqa: F401
+from repro.core import prescan  # noqa: F401
 from repro.core.collectives import repro_psum, repro_psum_packed  # noqa: F401
 from repro.core import rsum, buffers  # noqa: F401

@@ -34,9 +34,9 @@ from repro.core import eft
 from repro.core.types import ReproSpec
 
 __all__ = [
-    "ReproAcc", "zeros", "extract", "renorm", "from_values", "add_values",
-    "merge", "finalize", "demote_to", "to_paper_state", "from_paper_state",
-    "required_e1",
+    "ReproAcc", "zeros", "extract", "pad_levels", "renorm", "from_values",
+    "add_values", "merge", "finalize", "demote_to", "to_paper_state",
+    "from_paper_state", "required_e1",
 ]
 
 
@@ -70,23 +70,47 @@ def required_e1(values, spec: ReproSpec, axis=None, keepdims=False):
     return spec.clamp_e1(spec.lattice_e1(e)).astype(jnp.int32)
 
 
-def extract(values, e1, spec: ReproSpec):
-    """Per-element contributions as exact ints: k int[..., L].
+def extract(values, e1, spec: ReproSpec, levels: tuple[int, int] | None = None):
+    """Per-element contributions as exact ints: k int[..., hi - lo].
 
     ``values`` float (...), ``e1`` int32 broadcastable to values.shape.
     Precondition (guaranteed by :func:`required_e1`): |b| < 2^(e1 - m + W - 1).
+
+    ``levels = (lo, hi)`` restricts extraction to that level window (static
+    ints; default the full ``(0, L)``).  Sound only when the caller can prove
+    — via :mod:`repro.core.prescan` statistics — that the skipped top levels
+    extract exactly zero from every value (then the residual entering level
+    ``lo`` is the value itself) and the skipped bottom levels receive a zero
+    residual.  Under that precondition the result equals the corresponding
+    slice of the full extraction bit for bit, and :func:`pad_levels` embeds
+    it back into the canonical full-L layout.
     """
+    lo, hi = levels if levels is not None else (0, spec.L)
     values = values.astype(spec.dtype)
     e1 = jnp.asarray(e1, jnp.int32)
     r = values
     ks = []
-    for l in range(spec.L):
+    for l in range(lo, hi):
         e_l = e1 - l * spec.W
         A = eft.extractor(e_l, spec.dtype)
         q, r = eft.eft_fixed(A, r)
         k = (q * eft.pow2(spec.m - e_l, spec.dtype)).astype(spec.int_dtype)
         ks.append(k)
     return jnp.stack(ks, axis=-1)
+
+
+def pad_levels(k, levels: tuple[int, int] | None, spec: ReproSpec):
+    """Embed a level-window array ``(..., hi - lo)`` into the canonical
+    ``(..., L)`` layout with exact zeros on the pruned levels.  Zero is the
+    additive identity of the integer accumulator, so a padded pruned table
+    is *the same accumulator value* as an unpruned one — bit for bit."""
+    if levels is None:
+        return k
+    lo, hi = levels
+    if (lo, hi) == (0, spec.L):
+        return k
+    pads = [(0, 0)] * (k.ndim - 1) + [(lo, spec.L - hi)]
+    return jnp.pad(k, pads)
 
 
 def renorm(k, C, spec: ReproSpec):

@@ -1,0 +1,151 @@
+"""Exponent prescan: magnitude statistics that bound the live lattice levels.
+
+The paper (§V-C) balances batch size, cache footprint and *preprocessing*
+cost; the one preprocessing pass it always pays is a max over the batch to
+choose the extractor ladder.  This module generalizes that pass: one
+vectorized stream over the rows yields, per chunk and per column, the
+exponent of the largest magnitude AND of the smallest nonzero magnitude.
+From those two numbers and the lattice exponent ``e1`` we can *prove* which
+extraction levels receive no bits:
+
+* **top levels** — every value with ``|b| <= 0.5 * ulp(A_l)`` rounds to the
+  extractor exactly (``A/ulp`` is even, so a half-ulp tie goes back to A):
+  ``q_l = 0`` and the residual passes through unchanged.  A chunk whose max
+  exponent ``Emax`` satisfies ``e_l >= Emax + m + 2`` therefore contributes
+  exactly zero to level l.
+* **bottom levels** — every residual is an integer multiple of the smallest
+  value ulp ``2^(Emin - m)`` (values enter as multiples of their own ulp and
+  each extraction subtracts a multiple of a finer-or-equal power of two).
+  Entering level l the residual is bounded by ``0.5 * ulp(A_{l-1})``, so once
+  ``e_{l-1} <= Emin`` the residual is provably zero and levels l..L stay
+  untouched.
+
+Pruned extraction over the surviving window ``[lo, hi)`` — with zeros
+embedded back into the canonical full-L table — is therefore *bit-identical*
+to the unpruned path, for any data (denormals included: ``exponent()`` of a
+denormal underestimates by design, which only makes the bounds conservative).
+DESIGN.md §11 states the invariant; tests/test_batch_adaptive.py brute-forces
+it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import eft
+from repro.core.types import ReproSpec
+
+__all__ = [
+    "ExponentStats", "column_stats", "chunk_stats", "top_skip",
+    "level_window", "static_window", "window_length", "is_concrete",
+    "check_levels",
+]
+
+
+class ExponentStats(NamedTuple):
+    """Per-(chunk,)column exponent statistics from one stream over the rows.
+
+    ``max_exp`` is the unbiased exponent of the largest |value| (the all-zero
+    sentinel is ``min_exp - 1``, the exponent of +0.0); ``min_nz_exp`` is the
+    unbiased exponent of the smallest *nonzero* |value| (the all-zero
+    sentinel is ``max_exp + 1``, the exponent field of +inf).  Both sentinels
+    fall out of the bit arithmetic for free and make the pruning bounds
+    degenerate safely.
+    """
+
+    max_exp: jax.Array     # int32 (..., *F)
+    min_nz_exp: jax.Array  # int32 (..., *F)
+
+
+def _stats(absv, axis, spec: ReproSpec):
+    amax = jnp.max(absv, axis=axis)
+    amin = jnp.min(jnp.where(absv == 0, jnp.inf, absv), axis=axis)
+    return ExponentStats(max_exp=eft.exponent(amax.astype(spec.dtype)),
+                         min_nz_exp=eft.exponent(amin.astype(spec.dtype)))
+
+
+def column_stats(values, spec: ReproSpec) -> ExponentStats:
+    """Whole-input stats over the row axis: ``(n, *F) -> (*F,)``."""
+    return _stats(jnp.abs(jnp.asarray(values, spec.dtype)), 0, spec)
+
+
+def chunk_stats(chunked, spec: ReproSpec) -> ExponentStats:
+    """Per-chunk stats for pre-chunked rows: ``(nblk, chunk, *F) -> (nblk, *F)``.
+
+    This is the vectorized prescan pass proper: one reduction stream over the
+    rows, no data-dependent control flow, fusable with the padding reshape.
+    """
+    return _stats(jnp.abs(jnp.asarray(chunked, spec.dtype)), 1, spec)
+
+
+def top_skip(e1, max_exp, spec: ReproSpec):
+    """Number of *leading* levels provably receiving zero from every value.
+
+    Level l (0-indexed, exponent ``e_l = e1 - l*W``) is dead when
+    ``e_l >= max_exp + m + 2``, i.e. ``l <= (e1 - max_exp - m - 2) / W``.
+    Works elementwise on arrays (per-chunk, per-column).
+    """
+    e1 = jnp.asarray(e1, jnp.int32)
+    max_exp = jnp.asarray(max_exp, jnp.int32)
+    skip = (e1 - max_exp - spec.m - 2) // spec.W + 1
+    return jnp.clip(skip, 0, spec.L)
+
+
+def _bottom_keep(e1, min_nz_exp, spec: ReproSpec):
+    """First provably-dead *trailing* level: l >= (e1 - Emin)/W + 1."""
+    e1 = jnp.asarray(e1, jnp.int32)
+    min_nz_exp = jnp.asarray(min_nz_exp, jnp.int32)
+    keep = -((-(e1 - min_nz_exp)) // spec.W) + 1     # ceil div + 1
+    return jnp.clip(keep, 0, spec.L)
+
+
+def level_window(stats: ExponentStats, e1, spec: ReproSpec):
+    """Elementwise live-level window ``(lo, hi)``: levels [lo, hi) may
+    receive bits; levels outside are exactly zero in the full extraction."""
+    return top_skip(e1, stats.max_exp, spec), _bottom_keep(
+        e1, stats.min_nz_exp, spec)
+
+
+def static_window(values, e1, spec: ReproSpec) -> tuple[int, int]:
+    """Concrete global level window for *concrete* inputs (host-driven
+    two-pass mode): union of every column's live window, as Python ints
+    usable to specialize compiled extraction loops.
+
+    Degenerate inputs (empty, all zero, or magnitudes beyond the clamped
+    lattice so every level extracts zero) collapse to the minimal window
+    ``(0, 1)`` — one level of provable zeros keeps every shape non-empty.
+    """
+    if values.shape[0] == 0:
+        return 0, 1
+    stats = column_stats(values, spec)
+    lo_a, hi_a = level_window(stats, e1, spec)
+    lo = int(jnp.min(lo_a)) if lo_a.ndim else int(lo_a)
+    hi = int(jnp.max(hi_a)) if hi_a.ndim else int(hi_a)
+    if lo >= hi:
+        return 0, 1
+    return lo, hi
+
+
+def window_length(levels: tuple[int, int] | None, spec: ReproSpec) -> int:
+    lo, hi = levels if levels is not None else (0, spec.L)
+    return hi - lo
+
+
+def is_concrete(x) -> bool:
+    """True when ``x`` carries actual values (not a tracer) — the gate for
+    the host-driven prescan: under jit we cannot branch on data, so callers
+    fall back to the full window (still bit-identical, just unpruned)."""
+    return not isinstance(x, jax.core.Tracer) and not isinstance(
+        x, jax.ShapeDtypeStruct)
+
+
+def check_levels(levels, spec: ReproSpec) -> tuple[int, int]:
+    """Validate/normalize a static level window to concrete ints."""
+    if levels is None:
+        return 0, spec.L
+    lo, hi = int(levels[0]), int(levels[1])
+    if not (0 <= lo < hi <= spec.L):
+        raise ValueError(f"level window {levels!r} not within [0, {spec.L}]")
+    return lo, hi

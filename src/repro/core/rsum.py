@@ -169,17 +169,16 @@ def rsum_simd_chunked(values, spec: ReproSpec, c: int, V: int = 64):
     scalar summation state between calls (load/expand + merge/store)."""
     values = jnp.asarray(values, spec.dtype).reshape(-1)
     nb = spec.nb
-    c = max(c, V * nb) if c % (V * nb) == 0 else c
+    # round c up to a whole number of V*NB SIMD blocks (min one block) so
+    # every chunk reshapes exactly; zero-value padding is the identity of
+    # the extraction, so the persisted state is unchanged by the round-up
+    c = max(V * nb, -(-c // (V * nb)) * (V * nb))
     chunks = pad_and_chunk(values, c)
     f = choose_f(chunks, spec)
     S0, C0 = init_state(f, spec)
 
-    inner_pad = (-c) % (V * nb)
-
     def step(carry, chunk):
         S, C = carry
-        if inner_pad:
-            chunk = jnp.concatenate([chunk, jnp.zeros(inner_pad, spec.dtype)])
         blocks = chunk.reshape(-1, nb, V)
         Sl, Cl = _expand_lanes(S, C, V, spec)
 

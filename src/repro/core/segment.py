@@ -25,8 +25,8 @@ __all__ = ["segment_rsum", "onehot_block_bound", "scatter_chunk_bound"]
 
 
 def segment_rsum(values, segment_ids, num_segments: int, spec: ReproSpec,
-                 method: str = "auto", e1=None, chunk: int | None = None
-                 ) -> ReproAcc:
+                 method: str = "auto", e1=None, chunk: int | None = None,
+                 levels: tuple[int, int] | None = None) -> ReproAcc:
     """Bit-reproducible GROUPBY-SUM: the paper's core operation.
 
     Args:
@@ -34,18 +34,22 @@ def segment_rsum(values, segment_ids, num_segments: int, spec: ReproSpec,
       segment_ids:  int32 (n,) in [0, num_segments) — the key column.
       num_segments: static group count G.
       spec:         accumulator format (ScalarT, L, W).
-      method:       'scatter' | 'sort' | 'onehot' | 'pallas' | 'auto' (the
-                    cost-model planner, :func:`repro.ops.plan.plan_groupby`).
+      method:       'scatter' | 'sort' | 'radix' | 'onehot' | 'pallas' |
+                    'auto' (the cost-model planner,
+                    :func:`repro.ops.plan.plan_groupby`).
       e1:           optional shared lattice exponent; derived from the global
                     max by default (per-group maxima would tighten the error
                     bound at the cost of a segment-max pass — both orderings
                     are reproducible; we expose the cheap one).
       chunk:        block size between renormalizations (the summation-buffer
                     size knob; defaults to the per-method safe bound).
+      levels:       optional static live-level window from
+                    :mod:`repro.core.prescan`; the returned table is full-L
+                    and bit-identical either way.
 
     Returns a batched ReproAcc with batch shape (G,).  The result is
-    bit-identical across methods, element orderings, chunk sizes and
-    shardings.
+    bit-identical across methods, element orderings, chunk sizes, level
+    windows and shardings.
     """
     values = jnp.asarray(values)
     segment_ids = jnp.asarray(segment_ids, jnp.int32)
@@ -55,11 +59,18 @@ def segment_rsum(values, segment_ids, num_segments: int, spec: ReproSpec,
     if e1 is None:
         # global (not per-feature) lattice: historical segment_rsum contract
         e1 = acc_mod.required_e1(values, spec)
-    if method == "auto":
+    num_buckets = None
+    if method == "auto" or chunk is None:
+        # the planner picks the summation-buffer size by the residency model
+        # even for explicit methods (chunk size never changes the bits)
         from repro.ops.plan import plan_groupby
         n = int(values.shape[0])
         ncols = int(values.size // max(n, 1)) if values.ndim > 1 else 1
-        plan = plan_groupby(n, num_segments, spec, ncols=ncols, chunk=chunk)
+        plan = plan_groupby(n, num_segments, spec, ncols=ncols, chunk=chunk,
+                            method=method, levels=levels)
         method, chunk = plan.method, plan.chunk
+        if method in ("sort", "radix"):
+            num_buckets = plan.buckets
     return aggregates.segment_table(values, segment_ids, num_segments, spec,
-                                    method=method, e1=e1, chunk=chunk)
+                                    method=method, e1=e1, chunk=chunk,
+                                    levels=levels, num_buckets=num_buckets)

@@ -22,6 +22,17 @@ MXU-friendly tiles exactly the way the paper trades partitioning passes for
 cache residency.  The W knob trades per-level accuracy for tile size
 (W=18 -> 128-row tiles; W=12 -> 8192-row tiles), the TPU analogue of the
 paper's bsz/cache trade-off (§V-C).
+
+Level pruning (DESIGN.md §11): the kernel is *ladder-agnostic* — ``L`` is
+simply the number of extractor rows in ``A``/``inv_ulp``, so the wrapper
+(ops.py) may hand it a prescan-proved sub-ladder ``levels = (lo, hi)`` and
+the kernel streams, extracts and renormalizes only those ``hi - lo`` live
+levels.  Extraction starting at level ``lo`` with ``r = x`` is exact
+because every skipped top level provably extracts q = 0 (the residual
+passes through unchanged); the skipped levels are re-embedded as exact
+zeros outside, keeping the full-L table bit-identical to an unpruned run
+while the per-block FLOPs, VMEM scratch and output DMA all shrink by
+``L / (hi - lo)``.
 """
 from __future__ import annotations
 

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import accumulator as acc_mod
 from repro.core import eft
+from repro.core import prescan
 from repro.core.accumulator import ReproAcc
 from repro.core.aggregates import pad_and_chunk
 from repro.core.types import ReproSpec
@@ -30,21 +31,28 @@ def _auto_interpret() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "spec",
                                              "block_n", "group_tile",
-                                             "interpret"))
+                                             "interpret", "levels"))
 def segment_agg_kernel(values, segment_ids, num_segments: int,
                        spec: ReproSpec = ReproSpec(), e1=None,
                        block_n: int | None = None, group_tile: int = 512,
-                       interpret: bool | None = None) -> ReproAcc:
+                       interpret: bool | None = None,
+                       levels: tuple[int, int] | None = None) -> ReproAcc:
     """Fused reproducible GROUPBY on the MXU: (n, ncols) -> table (G, ncols, L).
 
     Bit-identical to ``repro.core.aggregates.segment_table`` (any method)
     given the same per-column ``e1`` (defaults to the per-column row max,
-    matching ``segment_table``).
+    matching ``segment_table``).  ``levels = (lo, hi)`` hands the kernel a
+    pruned extractor sub-ladder (static; prescan-proved, see
+    :mod:`repro.core.prescan`): the grid streams and accumulates only the
+    live levels, and the dead levels come back as exact zeros — the full-L
+    table is bit-identical either way.
     """
     if interpret is None:
         interpret = _auto_interpret()
     if spec.m > 30:
         raise ValueError("the TPU kernel supports float32 accumulators")
+    lo, hi = prescan.check_levels(levels, spec)
+    nlev = hi - lo
     bound = exact_block_bound(spec.m, spec.W)
     block_n = min(block_n or bound, bound)
     values = jnp.asarray(values, spec.dtype)
@@ -56,9 +64,10 @@ def segment_agg_kernel(values, segment_ids, num_segments: int,
     if e1 is None:
         e1 = acc_mod.required_e1(values, spec, axis=0)       # (ncols,)
     e1 = jnp.broadcast_to(jnp.asarray(e1, jnp.int32), (ncols,))
-    es = e1[None, :] - jnp.arange(spec.L, dtype=jnp.int32)[:, None] * spec.W
-    A = eft.extractor(es, spec.dtype)                        # (L, ncols)
-    inv_ulp = eft.pow2(spec.m - es, spec.dtype)              # (L, ncols)
+    lvl = jnp.arange(lo, hi, dtype=jnp.int32)
+    es = e1[None, :] - lvl[:, None] * spec.W                 # (nlev, ncols)
+    A = eft.extractor(es, spec.dtype)                        # (nlev, ncols)
+    inv_ulp = eft.pow2(spec.m - es, spec.dtype)              # (nlev, ncols)
 
     # padding ids = -1: matches no group tile
     x3d, ids2d = pad_and_chunk(values, block_n, segment_ids, dump_id=-1)
@@ -68,13 +77,14 @@ def segment_agg_kernel(values, segment_ids, num_segments: int,
     n_tiles = -(-num_segments // group_tile)
 
     k, C = segment_rsum_pallas_call(
-        ids2d, x3d, A, inv_ulp, L=spec.L, m=spec.m, block_n=block_n,
+        ids2d, x3d, A, inv_ulp, L=nlev, m=spec.m, block_n=block_n,
         group_tile=group_tile, num_group_tiles=n_tiles, interpret=interpret)
-    k = k[:, :, :num_segments].transpose(2, 1, 0)            # (G, ncols, L)
+    k = k[:, :, :num_segments].transpose(2, 1, 0)         # (G, ncols, nlev)
     C = C[:, :, :num_segments].transpose(2, 1, 0)
+    k = acc_mod.pad_levels(k.astype(spec.int_dtype), levels, spec)
+    C = acc_mod.pad_levels(C.astype(spec.int_dtype), levels, spec)
     e1_b = jnp.broadcast_to(e1, (num_segments, ncols))
-    return ReproAcc(k=k.astype(spec.int_dtype), C=C.astype(spec.int_dtype),
-                    e1=e1_b)
+    return ReproAcc(k=k, C=C, e1=e1_b)
 
 
 def segment_rsum_kernel(values, segment_ids, num_segments: int,

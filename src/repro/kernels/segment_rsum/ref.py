@@ -17,7 +17,9 @@ def segment_rsum_ref(values, segment_ids, num_segments: int,
 
 
 def segment_agg_ref(values, segment_ids, num_segments: int,
-                    spec: ReproSpec = ReproSpec(), e1=None) -> ReproAcc:
-    """Must match ops.segment_agg_kernel bit-for-bit (values (n, ncols))."""
+                    spec: ReproSpec = ReproSpec(), e1=None,
+                    levels=None) -> ReproAcc:
+    """Must match ops.segment_agg_kernel bit-for-bit (values (n, ncols)),
+    including under a pruned level window."""
     return segment_table(values, segment_ids, num_segments, spec,
-                         method="onehot", e1=e1)
+                         method="onehot", e1=e1, levels=levels)

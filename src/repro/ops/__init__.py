@@ -6,13 +6,17 @@ The layering (DESIGN.md §10):
   GROUPBY entry point (SUM/COUNT/MEAN/VAR/STD/SUM(x*y)/MIN/MAX, one fused
   pass);
 * :mod:`repro.ops.plan` — the cost-model planner dispatching between the
-  jnp strategies and the Pallas kernel;
+  jnp strategies and the Pallas kernel (buffer-residency chunk and radix
+  fan-out included);
+* :mod:`repro.ops.calibrate` — the measured autotuner feeding the planner
+  microbenchmarked per-row costs (JSON cache, opt-in autotune);
 * :mod:`repro.ops.sharded` — the ``shard_map`` + ``repro_psum`` distributed
   GROUPBY, bit-identical across mesh shapes.
 """
 from repro.ops.groupby import groupby_agg, agg_name, AGG_KINDS  # noqa: F401
 from repro.ops.plan import (  # noqa: F401
-    GroupbyPlan, plan_groupby, default_chunk, onehot_block_bound,
-    scatter_chunk_bound, pad_and_chunk, METHODS,
+    GroupbyPlan, plan_groupby, pick_chunk, default_chunk, onehot_block_bound,
+    scatter_chunk_bound, pad_and_chunk, table_bytes, radix_buckets, METHODS,
 )
+from repro.ops import calibrate  # noqa: F401
 from repro.ops.sharded import sharded_groupby_agg  # noqa: F401

@@ -1,0 +1,263 @@
+"""Measured autotuner: microbenchmarked per-row costs for the planner.
+
+The paper's batch-size/cache balancing (§V-C) is machine-dependent; hardwired
+cost constants inevitably drift from the hardware actually running the query
+(BENCH_groupby.json showed the hand-guessed crossovers off by ~40x between
+CPU and TPU-shaped lanes).  This module replaces guessing with measurement:
+
+* :func:`calibrate` runs each executable strategy over a small grid of
+  (G, n, ncols) shapes, records the median per-row wall time, and persists
+  the points to a JSON cache (``.repro_calibration.json`` by default,
+  overridable via ``REPRO_CALIBRATION_CACHE``; the file is machine-local and
+  gitignored);
+* :func:`fitted_cost` interpolates a strategy's per-row cost at an arbitrary
+  (n, G, ncols) by inverse-distance weighting in log2-space — exact at the
+  measured points, smooth between them;
+* :func:`for_planner` is the lazy hook :func:`repro.ops.plan.plan_groupby`
+  consults: it loads the cache if one exists, and — only when
+  ``REPRO_AUTOTUNE=1`` — runs a quick calibration on first use.  The
+  hardwired constants remain as the cold-start model, so importing this
+  module never costs anything in a fresh environment (tests/CI stay
+  deterministic unless they opt in).
+
+Calibration never affects results: every strategy returns bit-identical
+tables, so a stale or wrong cache can only cost throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregates import segment_table
+from repro.core.types import ReproSpec
+
+__all__ = [
+    "Calibration", "CACHE_ENV", "AUTOTUNE_ENV", "DEFAULT_CACHE_PATH",
+    "cache_path", "spec_key", "load", "save", "measure_point",
+    "default_grid", "calibrate", "fitted_cost", "for_planner",
+    "clear_memo",
+]
+
+CACHE_ENV = "REPRO_CALIBRATION_CACHE"
+AUTOTUNE_ENV = "REPRO_AUTOTUNE"
+DEFAULT_CACHE_PATH = ".repro_calibration.json"
+VERSION = 1
+
+# onehot materializes (block, G+1) one-hots; measuring it beyond this group
+# count would dominate calibration time for a method the planner would never
+# pick there anyway.
+_ONEHOT_G_CAP = 1 << 12
+
+
+def cache_path(path: str | None = None) -> str:
+    return path or os.environ.get(CACHE_ENV) or DEFAULT_CACHE_PATH
+
+
+def spec_key(spec: ReproSpec) -> str:
+    return f"{np.dtype(spec.dtype).name}/L{spec.L}/W{spec.W}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """A set of measured (backend, spec, method, n, G, ncols) -> ns/row
+    points.  ``backend`` is the backend of the *most recent* calibration;
+    points carry their own so one cache file serves mixed cpu/gpu/tpu use."""
+
+    backend: str
+    points: tuple  # of dicts: {backend, spec, method, n, G, ncols, ns_per_row}
+    version: int = VERSION
+
+    def select(self, spec: ReproSpec, method: str,
+               backend: str | None = None):
+        key = spec_key(spec)
+        return [p for p in self.points
+                if p["spec"] == key and p["method"] == method
+                and (backend is None or p.get("backend", self.backend)
+                     == backend)]
+
+
+def save(cal: Calibration, path: str | None = None) -> str:
+    path = cache_path(path)
+    payload = {"version": cal.version, "backend": cal.backend,
+               "points": list(cal.points)}
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    os.replace(tmp, path)
+    clear_memo()
+    return path
+
+
+def load(path: str | None = None) -> Calibration | None:
+    path = cache_path(path)
+    try:
+        with open(path) as fh:
+            payload = json.load(fh)
+    except (OSError, ValueError):
+        return None
+    if payload.get("version") != VERSION:
+        return None
+    backend = payload.get("backend", "unknown")
+    points = tuple({"backend": backend, **p}
+                   for p in payload.get("points", ()))
+    return Calibration(backend=backend, points=points)
+
+
+_memo: dict = {}
+
+
+def clear_memo() -> None:
+    """Drop the per-process load/autotune memo (tests, cache rewrites)."""
+    _memo.clear()
+
+
+def _median_time(fn, *args, iters: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)          # compile + warm
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def measure_point(method: str, n: int, num_segments: int, ncols: int,
+                  spec: ReproSpec, iters: int = 3) -> float:
+    """Median ns/row of one strategy on one synthetic shape."""
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.random((n, ncols)).astype(np.dtype(spec.dtype)))
+    ids = jnp.asarray(rng.integers(0, num_segments, n).astype(np.int32))
+    fn = jax.jit(functools.partial(segment_table, num_segments=num_segments,
+                                   spec=spec, method=method))
+    return _median_time(fn, vals, ids, iters=iters) / n * 1e9
+
+
+def default_grid(quick: bool = True):
+    """(n, G, ncols) shapes to measure.  Small on purpose: calibration cost
+    is paid once per machine, but 'once' should still be seconds."""
+    if quick:
+        return [(1 << 15, 1 << 4, 1), (1 << 15, 1 << 10, 1),
+                (1 << 15, 1 << 16, 1), (1 << 15, 1 << 10, 4)]
+    return [(n, g, c)
+            for n in (1 << 15, 1 << 18)
+            for g in (1 << 4, 1 << 10, 1 << 16, 1 << 20)
+            for c in (1, 4)]
+
+
+def calibrate(spec: ReproSpec | None = None, methods=None, grid=None,
+              backend: str | None = None, path: str | None = None,
+              save_cache: bool = True, quick: bool = True,
+              measure=measure_point) -> Calibration:
+    """Microbenchmark the strategies and (optionally) persist the points.
+
+    Merges with any existing cache (same-key points are replaced), so
+    successive calibrations of different specs accumulate.  ``measure`` is
+    injectable for tests.
+    """
+    spec = spec or ReproSpec()
+    if backend is None:
+        backend = jax.default_backend()
+    if methods is None:
+        methods = ["scatter", "sort", "onehot"]
+        if backend == "tpu" and spec.m <= 30:
+            methods.append("pallas")
+    grid = list(grid if grid is not None else default_grid(quick))
+    key = spec_key(spec)
+    points = []
+    for method in methods:
+        for n, g, ncols in grid:
+            if method in ("onehot", "pallas") and g > _ONEHOT_G_CAP:
+                continue
+            ns = measure(method, n, g, ncols, spec)
+            points.append({"backend": backend, "spec": key, "method": method,
+                           "n": n, "G": g, "ncols": ncols,
+                           "ns_per_row": float(ns)})
+    prior = load(path)
+    if prior is not None:
+        # merge: replace same-key points, keep everything else — including
+        # other backends' measurements, which must survive a recalibration
+        # on this one
+        full_key = ("backend", "spec", "method", "n", "G", "ncols")
+        fresh = {tuple(p[k] for k in full_key) for p in points}
+        points = [p for p in prior.points
+                  if tuple(p[k] for k in full_key) not in fresh] + points
+    cal = Calibration(backend=backend, points=tuple(points))
+    if save_cache:
+        save(cal, path)
+    return cal
+
+
+# max extrapolation in G beyond the measured envelope, per method: flat
+# IDW extrapolation is harmless for methods whose per-row cost is ~G-free
+# (scatter/sort) but badly wrong for the G-linear dense paths, which are
+# also the ones the grid deliberately caps — those get no margin at all
+_COVERAGE_MARGIN = {"onehot": 1, "pallas": 1}
+_DEFAULT_MARGIN = 4
+
+
+def fitted_cost(cal: Calibration, method: str, n: int, num_segments: int,
+                ncols: int, spec: ReproSpec,
+                backend: str | None = None) -> float | None:
+    """Interpolated per-row cost (ns) at (n, G, ncols), or None if the cache
+    has no points for this (backend, spec, method) or the query lies
+    outside the measured group-count envelope for the method.
+
+    Inverse-square-distance weighting in (log2 n, log2 G, log2 ncols): exact
+    at measured points, smooth and monotone-ish between them.  Beyond the
+    per-method envelope the fit abstains and the planner falls back to the
+    cold model, whose G terms are explicit.
+    """
+    pts = cal.select(spec, method, backend)
+    if not pts:
+        return None
+    margin = _COVERAGE_MARGIN.get(method, _DEFAULT_MARGIN)
+    if num_segments > margin * max(p["G"] for p in pts):
+        return None
+    q = np.array([np.log2(max(n, 1)), np.log2(max(num_segments, 1)),
+                  np.log2(max(ncols, 1))])
+    w_sum = c_sum = 0.0
+    for p in pts:
+        f = np.array([np.log2(p["n"]), np.log2(p["G"]),
+                      np.log2(max(p["ncols"], 1))])
+        d2 = float(np.sum((q - f) ** 2))
+        if d2 < 1e-12:
+            return float(p["ns_per_row"])
+        w = 1.0 / d2
+        w_sum += w
+        c_sum += w * p["ns_per_row"]
+    return c_sum / w_sum
+
+
+def for_planner(spec: ReproSpec, backend: str) -> Calibration | None:
+    """The planner's lazy calibration source (memoized per process).
+
+    Loads the persisted cache when present; when it holds no points for
+    this (backend, spec) and ``REPRO_AUTOTUNE`` is truthy, runs a quick
+    calibration for *this* spec on first use and merges it into the cache
+    (the 'measured autotuner' behavior, opt-in so tests and cold CI runs
+    never pay or depend on it).  Memoized per (cache, backend, spec) so a
+    second spec in the same process still gets its first-use calibration.
+    """
+    memo_key = (cache_path(), backend, spec_key(spec))
+    if memo_key in _memo:
+        return _memo[memo_key]
+    cal = load()
+    covered = cal is not None and any(
+        p.get("backend", cal.backend) == backend
+        and p["spec"] == spec_key(spec) for p in cal.points)
+    if not covered and os.environ.get(AUTOTUNE_ENV, "") not in ("", "0"):
+        cal = calibrate(spec, backend=backend, quick=True)
+    if cal is not None and not any(
+            p.get("backend", cal.backend) == backend for p in cal.points):
+        cal = None          # cache exists but has no points for this backend
+    _memo[memo_key] = cal
+    return cal

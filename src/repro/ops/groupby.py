@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import accumulator as acc_mod
 from repro.core import aggregates
+from repro.core import prescan
 from repro.core.types import ReproSpec
 from repro.ops.plan import plan_groupby
 
@@ -130,6 +131,38 @@ def _minmax_cols(plans):
     return sorted({p[1] for p in plans if p[0] in ("min", "max")})
 
 
+def _resolve_levels(levels, X, e1, spec: ReproSpec):
+    """Turn the ``levels`` request into (static window | None, chunk_skip).
+
+    ``"auto"`` + concrete inputs = the prescan pass: one vectorized stream
+    over the rows yields per-chunk, per-column exponent stats; the union of
+    the live windows becomes the static window, and per-chunk top-skipping
+    is enabled only when some chunk can prune *more* than the union (i.e.
+    the data is magnitude-heterogeneous) — homogeneous inputs skip the
+    per-chunk switch entirely so the hot loop stays branchless.
+    """
+    if levels is None:
+        return None, False
+    if levels != "auto":
+        return prescan.check_levels(levels, spec), False
+    if not (prescan.is_concrete(X) and prescan.is_concrete(e1)):
+        return None, False                      # traced: full window
+    if X.shape[0] == 0:
+        return (0, 1), False                    # empty input: all-zero table
+    probe = aggregates.default_chunk("scatter", spec)
+    stats = prescan.chunk_stats(
+        aggregates.pad_and_chunk(X, probe), spec)            # (nblk, ncols)
+    lo_a, hi_a = prescan.level_window(stats, e1[None, :], spec)
+    lo, hi = int(jnp.min(lo_a)), int(jnp.max(hi_a))
+    if lo >= hi:
+        lo, hi = 0, 1                            # degenerate: all-zero input
+    # heterogeneous when some chunk's own window starts above the union's
+    # lo, i.e. that chunk can skip more top levels than the static window
+    chunk_skip = hi - lo > 1 and bool(
+        jnp.max(jnp.min(lo_a.reshape(lo_a.shape[0], -1), axis=1)) > lo)
+    return (lo, hi), chunk_skip
+
+
 def _finalize_plans(names, plans, sums, mins, maxs, spec: ReproSpec):
     """Derive every requested aggregate from the finalized table.
 
@@ -164,7 +197,8 @@ def _finalize_plans(names, plans, sums, mins, maxs, spec: ReproSpec):
 
 def groupby_agg(values, keys, num_segments: int, aggs=("sum",),
                 spec: ReproSpec | None = None, method: str = "auto",
-                chunk: int | None = None, return_table: bool = False):
+                chunk: int | None = None, return_table: bool = False,
+                levels="auto"):
     """Bit-reproducible multi-aggregate GROUPBY.
 
     Args:
@@ -177,15 +211,25 @@ def groupby_agg(values, keys, num_segments: int, aggs=("sum",),
                     'mean'.
       spec:         accumulator format; default ``ReproSpec()`` (f32, L=2).
       method:       'auto' (cost-model planner) or an explicit strategy:
-                    'onehot' | 'scatter' | 'sort' | 'pallas'.
+                    'onehot' | 'scatter' | 'sort' | 'radix' | 'pallas'.
       chunk:        summation-buffer size knob (clamped to safe bounds).
       return_table: also return the raw accumulator table ``ReproAcc
                     (G, ncols, L)`` (for exact cross-fragment merging).
+      levels:       lattice-level window.  ``"auto"`` (default) runs the
+                    exponent prescan when the inputs are concrete — the
+                    batch-adaptive two-pass mode (DESIGN.md §11): pass 1
+                    streams the rows once for magnitude statistics, the host
+                    derives the live window ``L_eff <= spec.L`` and whether
+                    per-chunk pruning can pay, pass 2 runs the specialized
+                    extraction.  Under jit (tracers) it degrades to the full
+                    window.  ``None`` forces full; an explicit ``(lo, hi)``
+                    tuple is used as given (caller-proved, e.g. from a
+                    global prescan over shards).
 
     Returns an ordered dict mapping canonical names (see :func:`agg_name`)
     to finalized (G,) arrays; with ``return_table=True``, a
     ``(results, table)`` pair.  Every output is bit-identical across
-    methods, row orderings, chunk sizes and shardings.
+    methods, row orderings, chunk sizes, level windows and shardings.
     """
     spec = spec or ReproSpec()
     v = _as_matrix(values, spec)
@@ -198,12 +242,15 @@ def groupby_agg(values, keys, num_segments: int, aggs=("sum",),
 
     table = None
     if ncols:
-        plan = plan_groupby(int(X.shape[0]), num_segments, spec, ncols=ncols,
-                            method=method, chunk=chunk)
         e1 = acc_mod.required_e1(X, spec, axis=0)            # per-column
-        table = aggregates.segment_table(X, keys, num_segments, spec,
-                                         method=plan.method, e1=e1,
-                                         chunk=plan.chunk)
+        lv, chunk_skip = _resolve_levels(levels, X, e1, spec)
+        plan = plan_groupby(int(X.shape[0]), num_segments, spec, ncols=ncols,
+                            method=method, chunk=chunk, levels=lv)
+        table = aggregates.segment_table(
+            X, keys, num_segments, spec, method=plan.method, e1=e1,
+            chunk=plan.chunk, levels=lv, chunk_skip=chunk_skip,
+            num_buckets=plan.buckets if plan.method in ("sort", "radix")
+            else None)
         sums = acc_mod.finalize(table, spec)                 # (G, ncols)
     else:
         sums = jnp.zeros((num_segments, 0), spec.dtype)

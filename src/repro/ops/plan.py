@@ -1,49 +1,58 @@
-"""Cost-model planner for reproducible GROUPBY (DESIGN.md §10).
+"""Cost-model planner for reproducible GROUPBY (DESIGN.md §10/§11).
 
-Every execution path — jnp onehot / scatter / sort and the Pallas MXU kernel
-— returns bit-identical accumulator tables, so method choice is *purely* a
-performance decision.  This module makes that decision explicit: an abstract
-per-row cost for each candidate, derived from the same machine model the
-paper uses (summation-buffer residency, partitioning passes, SIMD width),
-replaces the old ad-hoc ``method == "auto"`` branch in ``core/segment.py``.
+Every execution path — jnp onehot / scatter / radix (a.k.a. sort) and the
+Pallas MXU kernel — returns bit-identical accumulator tables, so method
+choice is *purely* a performance decision.  This module makes that decision
+explicit and auditable: :func:`plan_groupby` returns the strategy, the
+summation-buffer size (``chunk``), the radix fan-out (``buckets``) and one
+line of rationale.
 
-The model, in per-row cost units (one vector op on one lane ~ 1):
+Two cost sources, in priority order:
 
-* every path pays extraction: L error-free transformations + an integer
-  conversion per level (``_EXTRACT_COST`` per level);
-* ``onehot`` adds a dense (block x G) accumulation: G multiply-adds per row
-  per level, spread over ``_LANES`` vector lanes;
-* ``pallas`` is the same matmul on the MXU systolic array
-  (``_LANES * _MXU_DEPTH`` MACs/cycle) — TPU backend + f32 accumulators only;
-* ``scatter`` pays a random access per level; the penalty quadruples once the
-  (G+1, ncols, L) int table spills the paper's summation-buffer budget
-  (``_CACHE_BYTES``);
-* ``sort`` pays a partitioning pass (2 log2 n per row) to restore locality,
-  keeping the in-cache scatter penalty at any group count — the paper's
-  PartitionAndAggregate (§V-B).
+* **measured** — when a calibration cache exists (see
+  :mod:`repro.ops.calibrate`), per-row costs are interpolated from actual
+  microbenchmarks of each strategy on this machine;
+* **modeled** — cold-start abstract per-row costs, derived from the same
+  machine model the paper uses (summation-buffer residency, partitioning
+  passes, SIMD width):
 
-Crossovers (f32, L=2, ncols=1): onehot wins up to G ~ 4096 on 128-lane
-hardware — the legacy heuristic, now derived — and G ~ 256 on CPU (the
-measured crossover in BENCH_groupby.json); sort overtakes scatter once the
-table spills (G ~ 2^19); on TPU the Pallas kernel holds to G ~ 2^18.
+  * every path pays extraction: one error-free transformation + an integer
+    conversion per *live* level (``_EXTRACT_COST``; the prescan's level
+    window shrinks this);
+  * ``onehot`` adds a dense (block x G) accumulation: G multiply-adds per
+    row per level, spread over ``_LANES`` vector lanes;
+  * ``pallas`` is the same matmul on the MXU systolic array
+    (``_LANES * _MXU_DEPTH`` MACs/cycle) — TPU backend + f32 accumulators;
+  * ``scatter`` pays a random access per level; the penalty quadruples once
+    the (G+1, ncols, L_eff) int table spills the summation-buffer budget;
+  * ``sort``/``radix`` pay the counting-sort partition (two streaming
+    passes + a B-lane rank scan) to make every sub-table cache-resident,
+    keeping the scatter penalty at its in-cache value for any group count.
+
+``chunk`` is picked by the paper's buffer-residency model (§V-C): the
+largest block whose extracted integers fit in the cache budget *beside* the
+(sub-)table, clamped to the overflow-safety bound.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import jax
+import numpy as np
 
 from repro.core.aggregates import (  # noqa: F401  (re-exports)
-    default_chunk, onehot_block_bound, pad_and_chunk, scatter_chunk_bound)
+    DEFAULT_CACHE_BYTES, default_chunk, onehot_block_bound, pad_and_chunk,
+    radix_buckets, scatter_chunk_bound, table_bytes)
+from repro.core.prescan import window_length
 from repro.core.types import ReproSpec
 
 __all__ = [
-    "GroupbyPlan", "plan_groupby", "default_chunk", "onehot_block_bound",
-    "scatter_chunk_bound", "pad_and_chunk", "METHODS",
+    "GroupbyPlan", "plan_groupby", "pick_chunk", "default_chunk",
+    "onehot_block_bound", "scatter_chunk_bound", "pad_and_chunk",
+    "table_bytes", "radix_buckets", "METHODS",
 ]
 
-METHODS = ("onehot", "scatter", "sort", "pallas")
+METHODS = ("onehot", "scatter", "sort", "radix", "pallas")
 
 _LANES = 128          # TPU VPU lane width
 _CPU_LANES = 8        # effective XLA:CPU one-hot throughput (measured:
@@ -53,7 +62,8 @@ _MXU_DEPTH = 64       # extra MAC throughput of the 128x128 systolic array
 _EXTRACT_COST = 4.0   # EFT + scale-to-int, per row per level
 _SCATTER_COST = 32.0  # random table access, per row per level, in cache
 _SPILL_FACTOR = 4.0   # penalty multiplier once the table leaves the cache
-_CACHE_BYTES = 1 << 24
+_PARTITION_COST = 8.0  # counting-sort partition: 2 streaming passes per row
+_CACHE_BYTES = DEFAULT_CACHE_BYTES
 
 
 def _clamp_chunk(method: str, chunk: int, spec: ReproSpec) -> int:
@@ -62,51 +72,126 @@ def _clamp_chunk(method: str, chunk: int, spec: ReproSpec) -> int:
     return min(chunk, scatter_chunk_bound(spec))
 
 
+def pick_chunk(method: str, num_segments: int, ncols: int, spec: ReproSpec,
+               levels=None, cache_bytes: int = _CACHE_BYTES) -> int:
+    """Buffer-residency chunk choice (paper §V-C, replacing the fixed
+    ``default_chunk``): the largest power-of-two block whose extracted
+    integer slab (chunk x ncols x L_eff x itemsize) plus the float rows fit
+    in the cache budget beside the (sub-)table, clamped to the per-method
+    exactness/overflow bound.  When even the table spills, the block reverts
+    to the safe default — blocking cannot buy residency back."""
+    if method in ("onehot", "pallas"):
+        return onehot_block_bound(spec)
+    bound = scatter_chunk_bound(spec)
+    tb = table_bytes(num_segments, ncols, spec, levels)
+    if method in ("sort", "radix"):
+        tb //= radix_buckets(num_segments, ncols, spec, cache_bytes, levels)
+    nlev = window_length(levels, spec)
+    row_bytes = max(int(ncols), 1) * (
+        nlev * np.dtype(spec.int_dtype).itemsize
+        + np.dtype(spec.dtype).itemsize)
+    free = cache_bytes - tb
+    if free < 256 * row_bytes:
+        # table spilled anyway: maximize the block to amortize the per-chunk
+        # renormalization sweep over the table (the dominant cost out there)
+        return bound
+    return int(min(bound, 1 << (int(free // row_bytes).bit_length() - 1)))
+
+
 @dataclasses.dataclass(frozen=True)
 class GroupbyPlan:
-    """An executable dispatch decision: strategy + buffer size + rationale."""
+    """An executable dispatch decision: strategy + buffer sizes + rationale."""
 
-    method: str          # 'onehot' | 'scatter' | 'sort' | 'pallas'
+    method: str          # 'onehot' | 'scatter' | 'sort' | 'radix' | 'pallas'
     chunk: int           # rows per block between renormalizations
-    cost: float          # modeled per-row cost (0.0 for explicit requests)
+    cost: float          # per-row cost (0.0 for explicit requests)
     reason: str          # one line of cost-model rationale
+    buckets: int = 1     # radix partition fan-out (1 = no partitioning)
+    source: str = "model"  # 'model' | 'measured' | 'explicit'
 
 
 def plan_groupby(n: int, num_segments: int, spec: ReproSpec, ncols: int = 1,
                  backend: str | None = None, method: str = "auto",
-                 chunk: int | None = None) -> GroupbyPlan:
+                 chunk: int | None = None, levels=None,
+                 calibration="auto") -> GroupbyPlan:
     """Choose an execution strategy for an (n rows, G groups, ncols columns)
-    reproducible GROUPBY.  Deterministic in its arguments; any choice is
+    reproducible GROUPBY.  Deterministic in its arguments (plus, when a
+    calibration cache is present, in that cache); any choice is
     bit-compatible with any other, so this is purely a throughput decision.
+
+    ``levels`` is the prescan's live-level window (shrinks extraction and
+    table-residency costs); ``calibration`` is ``"auto"`` (use the cache if
+    one exists), ``None`` (force the cold-start model), or a
+    :class:`repro.ops.calibrate.Calibration`.
     """
     if backend is None:
         backend = jax.default_backend()
+    buckets = radix_buckets(num_segments, ncols, spec, levels=levels)
     if method != "auto":
         if method not in METHODS:
             raise ValueError(f"unknown method {method!r}; want one of "
                              f"{('auto',) + METHODS}")
-        c = _clamp_chunk(method, chunk or default_chunk(method, spec), spec)
-        return GroupbyPlan(method, c, 0.0, "explicit request")
+        c = _clamp_chunk(
+            method, chunk or pick_chunk(method, num_segments, ncols, spec,
+                                        levels), spec)
+        return GroupbyPlan(method, c, 0.0, "explicit request",
+                           buckets=buckets if method in ("sort", "radix")
+                           else 1, source="explicit")
 
-    extract = _EXTRACT_COST * spec.L
-    table_bytes = (num_segments + 1) * ncols * spec.L * 2 * 4
-    in_cache = table_bytes <= _CACHE_BYTES
-    lanes = _LANES if backend == "tpu" else _CPU_LANES
-    costs = {
-        "onehot": extract + spec.L * num_segments / lanes,
-        "scatter": extract + spec.L * _SCATTER_COST *
-        (1.0 if in_cache else _SPILL_FACTOR),
-        "sort": 2.0 * math.log2(max(n, 2)) + extract +
-        spec.L * _SCATTER_COST,
-    }
+    cal = None
+    if calibration is not None:
+        from repro.ops import calibrate as cal_mod
+        cal = (cal_mod.for_planner(spec, backend)
+               if calibration == "auto" else calibration)
+
+    candidates = ["onehot", "scatter", "sort"]
     if backend == "tpu" and spec.m <= 30:
-        costs["pallas"] = extract + \
-            spec.L * num_segments / (_LANES * _MXU_DEPTH)
+        candidates.append("pallas")
+
+    costs, source = None, "model"
+    if cal is not None:
+        from repro.ops import calibrate as cal_mod
+        # fitted_cost returns None outside a method's measured-G envelope
+        # (e.g. onehot is never measured at large G), dropping it from the
+        # measured race rather than trusting a flat extrapolation
+        costs = {m: cal_mod.fitted_cost(cal, m, n, num_segments, ncols, spec,
+                                        backend=backend)
+                 for m in candidates}
+        costs = {m: c for m, c in costs.items() if c is not None}
+        if len(costs) >= 2:
+            source = "measured"
+        else:
+            costs = None
+    if costs is None:
+        nlev = window_length(levels, spec)
+        extract = _EXTRACT_COST * nlev
+        tb = table_bytes(num_segments, ncols, spec, levels)
+        in_cache = tb <= _CACHE_BYTES
+        lanes = _LANES if backend == "tpu" else _CPU_LANES
+        costs = {
+            "onehot": extract + nlev * num_segments / lanes,
+            "scatter": extract + nlev * _SCATTER_COST *
+            (1.0 if in_cache else _SPILL_FACTOR),
+            "sort": extract + nlev * _SCATTER_COST +
+            (0.0 if buckets == 1
+             else _PARTITION_COST + buckets / lanes),
+        }
+        if "pallas" in candidates:
+            costs["pallas"] = extract + \
+                nlev * num_segments / (_LANES * _MXU_DEPTH)
+
     best = min(costs, key=costs.get)
-    reason = (f"cost model: {best}={costs[best]:.1f}/row over "
+    tb = table_bytes(num_segments, ncols, spec, levels)
+    reason = (f"{'calibrated' if source == 'measured' else 'cost model'}: "
+              f"{best}={costs[best]:.1f}/row over "
               + ", ".join(f"{m}={c:.1f}" for m, c in sorted(costs.items())
                           if m != best)
               + f" (G={num_segments}, n={n}, ncols={ncols}, "
-              f"table {'fits' if in_cache else 'spills'} cache, {backend})")
-    c = _clamp_chunk(best, chunk or default_chunk(best, spec), spec)
-    return GroupbyPlan(best, c, costs[best], reason)
+              f"table {'fits' if tb <= _CACHE_BYTES else 'spills'} cache"
+              + (f", B={buckets}" if best in ("sort", "radix") else "")
+              + f", {backend})")
+    c = _clamp_chunk(best, chunk or pick_chunk(best, num_segments, ncols,
+                                               spec, levels), spec)
+    return GroupbyPlan(best, c, costs[best], reason,
+                       buckets=buckets if best in ("sort", "radix") else 1,
+                       source=source)

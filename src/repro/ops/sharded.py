@@ -43,7 +43,8 @@ __all__ = ["sharded_groupby_agg"]
 def sharded_groupby_agg(values, keys, num_segments: int, aggs=("sum",),
                         spec: ReproSpec | None = None, mesh=None,
                         axis_name: str = "data", method: str = "auto",
-                        chunk: int | None = None):
+                        chunk: int | None = None,
+                        levels: tuple[int, int] | None = None):
     """Multi-device :func:`repro.ops.groupby_agg` over a row-sharded table.
 
     Args:
@@ -51,6 +52,12 @@ def sharded_groupby_agg(values, keys, num_segments: int, aggs=("sum",),
         :func:`groupby_agg`.
       mesh:      mesh to shard rows over; default 1-D mesh of every device.
       axis_name: mesh axis carrying the rows.
+      levels:    optional static live-level window.  Must be proved against
+        the *global* lattice and data (e.g. ``prescan.static_window`` over
+        the whole column matrix before sharding) — each shard extracts on
+        the global ``pmax`` lattice, so a window valid for the whole input
+        is valid on every shard, and the pruned per-shard tables stay
+        bit-identical to unpruned ones under the integer psum merge.
 
     Rows are padded to the shard count with a dump group that is sliced off
     after the merge, so any device count accepts any row count.  Returns the
@@ -82,15 +89,18 @@ def sharded_groupby_agg(values, keys, num_segments: int, aggs=("sum",),
             [keys, jnp.full(pad, num_segments, jnp.int32)])
 
     plan = plan_groupby(int(X.shape[0]) // nshards, nseg1, spec,
-                        ncols=max(X.shape[1], 1), method=method, chunk=chunk)
+                        ncols=max(X.shape[1], 1), method=method, chunk=chunk,
+                        levels=levels)
 
     def local(x_s, id_s, m_s):
         if x_s.shape[1]:
             e1 = acc_mod.required_e1(x_s, spec, axis=0)      # (ncols,)
             e1 = lax.pmax(e1, axis_name)  # global lattice before extraction
-            tab = aggregates.segment_table(x_s, id_s, nseg1, spec,
-                                           method=plan.method, e1=e1,
-                                           chunk=plan.chunk)
+            tab = aggregates.segment_table(
+                x_s, id_s, nseg1, spec, method=plan.method, e1=e1,
+                chunk=plan.chunk, levels=levels,
+                num_buckets=plan.buckets if plan.method in ("sort", "radix")
+                else None)
             tab = collectives.repro_psum(tab, spec, (axis_name,))
             sums = acc_mod.finalize(tab, spec)               # (G+1, ncols)
         else:

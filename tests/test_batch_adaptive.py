@@ -1,0 +1,342 @@
+"""Tests for the batch-adaptive execution layer (DESIGN.md §11).
+
+The acceptance contract of ISSUE 5: the radix PartitionAndAggregate path and
+every level-pruned variant (static window, per-chunk skip, Pallas kernel)
+produce tables *bit-identical* to the seed scatter path across row
+permutations, chunk sizes, bucket counts, adversarial exponent ranges
+(denormals, zeros, mixed-magnitude columns) and L_eff in {1..L}; the
+prescan's level windows are sound (pruned levels provably all-zero in the
+full extraction); and the measured autotuner round-trips its cache and
+steers the planner.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accumulator as acc_mod
+from repro.core import prescan
+from repro.core.aggregates import (radix_buckets, radix_table, segment_table,
+                                   table_bytes)
+from repro.core.types import ReproSpec
+from repro.ops import calibrate as cal_mod
+from repro.ops import plan_groupby
+from repro.ops.groupby import groupby_agg
+from repro.ops.plan import pick_chunk, scatter_chunk_bound
+
+
+def _mixed(n, ncols=2, seed=0, denormals=True):
+    """Adversarial magnitudes: ~2^-12..2^12 spread, zeros, denormals."""
+    rng = np.random.default_rng(seed)
+    cols = [rng.standard_normal(n) * np.exp(rng.standard_normal(n) * 4),
+            rng.lognormal(0.0, 2.0, n)][:ncols]
+    v = np.stack(cols, axis=1).astype(np.float32)
+    v[::53] = 0.0
+    if denormals:
+        v[3::211] = 1e-41
+    return v
+
+
+def _assert_acc_equal(a, b, msg=""):
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# radix partition: bitwise-identical to seed scatter, any fan-out
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("g", [1, 5, 37, 129, 1000])
+@pytest.mark.parametrize("buckets", [2, 8, 64])
+def test_radix_bitwise_equals_scatter(g, buckets):
+    n = 3001
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    vals = jnp.asarray(_mixed(n, seed=g + buckets))
+    ids = jnp.asarray(
+        np.random.default_rng(g).integers(0, g, n).astype(np.int32))
+    e1 = acc_mod.required_e1(vals, spec, axis=0)
+    ref = segment_table(vals, ids, g, spec, method="scatter", e1=e1)
+    k, C = radix_table(vals, ids, g, spec, e1, chunk=512,
+                       num_buckets=buckets)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(ref.k))
+    np.testing.assert_array_equal(np.asarray(C), np.asarray(ref.C))
+
+
+@pytest.mark.parametrize("chunk", [64, 1024, 8192])
+def test_radix_permutation_and_chunk_invariance(chunk):
+    n, g = 2503, 41
+    spec = ReproSpec(dtype=jnp.float32, L=3)
+    vals = _mixed(n, seed=11)
+    ids = np.random.default_rng(12).integers(0, g, n).astype(np.int32)
+    e1 = acc_mod.required_e1(jnp.asarray(vals), spec, axis=0)
+    ref = segment_table(vals, ids, g, spec, method="scatter", e1=e1)
+    perm = np.random.default_rng(13).permutation(n)
+    got = segment_table(vals[perm], ids[perm], g, spec, method="radix",
+                        e1=e1, chunk=chunk)
+    _assert_acc_equal(ref, got, f"radix chunk={chunk}")
+    # 'sort' is the radix alias and must match too
+    got = segment_table(vals[perm], ids[perm], g, spec, method="sort",
+                        e1=e1, chunk=chunk)
+    _assert_acc_equal(ref, got, "sort alias")
+
+
+# ---------------------------------------------------------------------------
+# prescan soundness + level-pruned paths, L_eff in {1..L}
+# ---------------------------------------------------------------------------
+
+def _window_cases():
+    # (name, scale, L) engineered so static windows hit every L_eff in 1..L
+    return [
+        ("narrow_L1", 1.0, 1), ("narrow_L2", 1.0, 2), ("narrow_L4", 1.0, 4),
+        ("wide_L4", None, 4), ("tiny_L3", 1e-30, 3),
+    ]
+
+
+@pytest.mark.parametrize("name,scale,L", _window_cases())
+def test_prescan_window_sound_and_pruning_bitwise(name, scale, L):
+    """The pruned-out levels of the *full* extraction must be exactly zero,
+    and every pruned execution path must equal the full scatter table."""
+    n, g = 1777, 23
+    spec = ReproSpec(dtype=jnp.float32, L=L)
+    rng = np.random.default_rng(17)
+    if scale is None:
+        vals = _mixed(n, seed=19)
+    else:
+        vals = ((rng.random((n, 2)) + 1.0) * scale).astype(np.float32)
+    valsj = jnp.asarray(vals)
+    ids = jnp.asarray(rng.integers(0, g, n).astype(np.int32))
+    e1 = acc_mod.required_e1(valsj, spec, axis=0)
+    lo, hi = prescan.static_window(valsj, e1, spec)
+    assert 0 <= lo < hi <= spec.L
+
+    # soundness: full extraction is all-zero outside the window
+    k_full = acc_mod.extract(valsj, jnp.asarray(e1)[None, :], spec)
+    assert np.all(np.asarray(k_full)[..., :lo] == 0)
+    assert np.all(np.asarray(k_full)[..., hi:] == 0)
+    # and the window slice matches a pruned extraction exactly
+    k_win = acc_mod.extract(valsj, jnp.asarray(e1)[None, :], spec,
+                            levels=(lo, hi))
+    np.testing.assert_array_equal(np.asarray(k_full)[..., lo:hi],
+                                  np.asarray(k_win))
+
+    ref = segment_table(vals, ids, g, spec, method="scatter", e1=e1)
+    for method in ("scatter", "radix", "onehot"):
+        got = segment_table(vals, ids, g, spec, method=method, e1=e1,
+                            levels=(lo, hi), chunk_skip=True)
+        _assert_acc_equal(ref, got, f"{name} pruned {method}")
+
+
+def test_chunk_skip_heterogeneous_bitwise():
+    """Chunks of wildly different magnitude: the per-chunk switch must take
+    pruned branches (top_skip > 0 somewhere) and still match unpruned."""
+    spec = ReproSpec(dtype=jnp.float32, L=4)
+    rng = np.random.default_rng(23)
+    big = (rng.random(2048) + 1.0).astype(np.float32) * 2**30
+    small = (rng.random(4096) + 1.0).astype(np.float32) * 2**-20
+    vals = np.concatenate([big, small])[:, None]
+    ids = rng.integers(0, 13, len(vals)).astype(np.int32)
+    e1 = acc_mod.required_e1(jnp.asarray(vals), spec, axis=0)
+    # the small-value chunks can provably skip top levels on this lattice
+    stats = prescan.chunk_stats(
+        jnp.asarray(vals[2048:]).reshape(1, -1, 1), spec)
+    assert int(prescan.top_skip(e1, stats.max_exp, spec).min()) > 0
+    ref = segment_table(vals, ids, 13, spec, method="scatter", e1=e1)
+    got = segment_table(vals, ids, 13, spec, method="scatter", e1=e1,
+                        chunk=1024, chunk_skip=True)
+    _assert_acc_equal(ref, got, "chunk_skip")
+    got = segment_table(vals, ids, 13, spec, method="radix", e1=e1,
+                        chunk=1024, chunk_skip=True)
+    _assert_acc_equal(ref, got, "chunk_skip radix")
+
+
+def test_groupby_agg_auto_prescan_bitwise():
+    """groupby_agg's two-pass auto mode (concrete inputs) must equal the
+    full-window run for every method, and the Pallas kernel."""
+    n, g = 2111, 19
+    vals = _mixed(n, seed=29)
+    ids = np.random.default_rng(31).integers(0, g, n).astype(np.int32)
+    aggs = [("sum", 0), ("mean", 1), ("var", 0), ("count",)]
+    spec = ReproSpec(dtype=jnp.float32, L=3)
+    ref = groupby_agg(vals, ids, g, aggs, spec, method="scatter",
+                      levels=None)
+    for method in ("scatter", "radix", "sort", "onehot", "pallas"):
+        got = groupby_agg(vals, ids, g, aggs, spec, method=method)  # auto
+        assert list(ref) == list(got)
+        for key in ref:
+            np.testing.assert_array_equal(np.asarray(ref[key]),
+                                          np.asarray(got[key]), err_msg=key)
+
+
+def test_prescan_stats_brute_force():
+    rng = np.random.default_rng(37)
+    v = (rng.standard_normal((64, 3)) *
+         np.exp(rng.standard_normal((64, 3)) * 5)).astype(np.float32)
+    v[5] = 0.0
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    stats = prescan.column_stats(jnp.asarray(v), spec)
+    for c in range(3):
+        col = np.abs(v[:, c])
+        assert int(stats.max_exp[c]) == int(np.floor(np.log2(col.max())))
+        nz = col[col > 0]
+        assert int(stats.min_nz_exp[c]) == int(np.floor(np.log2(nz.min())))
+    # all-zero column: sentinels collapse the window to the degenerate (0,1)
+    z = jnp.zeros((16, 1), jnp.float32)
+    e1z = acc_mod.required_e1(z, spec, axis=0)
+    assert prescan.static_window(z, e1z, spec) == (0, 1)
+
+
+# ---------------------------------------------------------------------------
+# autotuner: cache round-trip, interpolation, planner steering
+# ---------------------------------------------------------------------------
+
+def _fake_measure(costs):
+    def m(method, n, g, ncols, spec):
+        return costs[method]
+    return m
+
+
+def test_calibration_roundtrip_and_planner_steering(tmp_path):
+    path = str(tmp_path / "cal.json")
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    grid = [(1 << 12, 16, 1), (1 << 12, 1 << 10, 1)]
+    cal = cal_mod.calibrate(
+        spec, grid=grid, path=path, backend="cpu",
+        measure=_fake_measure({"scatter": 10.0, "sort": 30.0,
+                               "onehot": 500.0}))
+    assert os.path.exists(path)
+    loaded = cal_mod.load(path)
+    assert loaded is not None and loaded.points == cal.points
+    with open(path) as fh:
+        assert json.load(fh)["version"] == cal_mod.VERSION
+    # exact at a grid point, finite in between
+    assert cal_mod.fitted_cost(cal, "scatter", 1 << 12, 16, 1, spec) == 10.0
+    mid = cal_mod.fitted_cost(cal, "scatter", 5000, 200, 1, spec)
+    assert 9.0 < mid < 11.0
+    # planner follows the measurements, not the cold model
+    p = plan_groupby(10**5, 64, spec, calibration=cal)
+    assert p.method == "scatter" and p.source == "measured"
+    assert "calibrated" in p.reason
+    # unknown spec in the cache -> graceful cold-model fallback
+    f64 = ReproSpec(dtype=jnp.float64, L=2)
+    p = plan_groupby(10**5, 64, f64, calibration=cal, backend="cpu")
+    assert p.source == "model"
+
+
+def test_fitted_cost_coverage_guard(tmp_path):
+    """Outside the measured-G envelope the fit must abstain (IDW would
+    flat-extrapolate onehot's G-linear cost), sending the planner back to
+    the cold model, which never picks onehot at huge G."""
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    cal = cal_mod.calibrate(
+        spec, grid=[(1 << 12, 16, 1), (1 << 12, 1 << 10, 1)],
+        path=str(tmp_path / "cal.json"), backend="cpu",
+        measure=_fake_measure({"scatter": 60.0, "sort": 60.0,
+                               "onehot": 8.0}))
+    assert cal_mod.fitted_cost(cal, "onehot", 10**6, 1 << 20, 1, spec) is None
+    p = plan_groupby(10**6, 1 << 20, spec, calibration=cal, backend="cpu")
+    assert p.method != "onehot" and p.source == "model"
+    # within coverage the cheap measured onehot wins
+    p = plan_groupby(10**5, 256, spec, calibration=cal, backend="cpu")
+    assert p.method == "onehot" and p.source == "measured"
+
+
+def test_calibration_preserves_other_backend_points(tmp_path):
+    path = str(tmp_path / "cal.json")
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    cal_mod.calibrate(spec, grid=[(1 << 12, 16, 1)], path=path,
+                      backend="tpu", methods=["scatter"],
+                      measure=_fake_measure({"scatter": 1.0}))
+    cal2 = cal_mod.calibrate(spec, grid=[(1 << 12, 16, 1)], path=path,
+                             backend="cpu", methods=["scatter"],
+                             measure=_fake_measure({"scatter": 9.0}))
+    assert len(cal2.select(spec, "scatter", backend="tpu")) == 1
+    assert cal_mod.fitted_cost(cal2, "scatter", 1 << 12, 16, 1, spec,
+                               backend="tpu") == 1.0
+    assert cal_mod.fitted_cost(cal2, "scatter", 1 << 12, 16, 1, spec,
+                               backend="cpu") == 9.0
+
+
+def test_for_planner_autotunes_each_uncovered_spec(tmp_path, monkeypatch):
+    """A cache covering one spec must not disable first-use autotune for
+    another spec under REPRO_AUTOTUNE=1."""
+    path = str(tmp_path / "cal.json")
+    monkeypatch.setenv(cal_mod.CACHE_ENV, path)
+    monkeypatch.setenv(cal_mod.AUTOTUNE_ENV, "1")
+    cal_mod.clear_memo()
+    f32 = ReproSpec(dtype=jnp.float32, L=2)
+    f64 = ReproSpec(dtype=jnp.float64, L=2)
+    cal_mod.calibrate(f32, grid=[(1 << 12, 16, 1)], backend="cpu",
+                      methods=["scatter"],
+                      measure=_fake_measure({"scatter": 1.0}))
+    calls = []
+    real_calibrate = cal_mod.calibrate
+
+    def fake_calibrate(spec, backend=None, quick=True):
+        calls.append(cal_mod.spec_key(spec))
+        return real_calibrate(spec, grid=[(1 << 12, 16, 1)],
+                              backend=backend, methods=["scatter"],
+                              measure=_fake_measure({"scatter": 2.0}))
+
+    monkeypatch.setattr(cal_mod, "calibrate", fake_calibrate)
+    assert cal_mod.for_planner(f32, "cpu") is not None
+    assert calls == []                       # f32 already covered: no re-run
+    cal = cal_mod.for_planner(f64, "cpu")
+    assert calls == [cal_mod.spec_key(f64)]  # f64 autotuned on first use
+    assert cal is not None and cal.select(f64, "scatter")
+    assert cal.select(f32, "scatter")        # merged, f32 points survive
+    cal_mod.clear_memo()
+
+
+def test_calibration_merge_keeps_other_points(tmp_path):
+    path = str(tmp_path / "cal.json")
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    cal_mod.calibrate(spec, grid=[(1 << 12, 16, 1)], path=path,
+                      backend="cpu",
+                      measure=_fake_measure({"scatter": 1.0, "sort": 2.0,
+                                             "onehot": 3.0}))
+    cal2 = cal_mod.calibrate(spec, grid=[(1 << 12, 64, 1)], path=path,
+                             backend="cpu", methods=["scatter"],
+                             measure=_fake_measure({"scatter": 5.0}))
+    gs = sorted(p["G"] for p in cal2.select(spec, "scatter"))
+    assert gs == [16, 64]
+    assert len(cal2.select(spec, "sort")) == 1    # prior points survive
+
+
+# ---------------------------------------------------------------------------
+# planner: residency-model chunk + dtype-correct table bytes
+# ---------------------------------------------------------------------------
+
+def test_table_bytes_uses_spec_int_dtype():
+    f32 = ReproSpec(dtype=jnp.float32, L=2)
+    f64 = ReproSpec(dtype=jnp.float64, L=2)
+    assert table_bytes(1000, 1, f32) == 1001 * 2 * 2 * 4
+    assert table_bytes(1000, 1, f64) == 1001 * 2 * 2 * 8   # int64 entries
+    assert table_bytes(1000, 1, f32, levels=(0, 1)) == 1001 * 1 * 2 * 4
+
+
+def test_pick_chunk_residency_model():
+    # W=12 raises the overflow bound to 2^19 rows, so the residency model —
+    # not the safety clamp — decides the block at mid-size tables
+    spec = ReproSpec(dtype=jnp.float32, L=2, W=12)
+    small = pick_chunk("scatter", 64, 1, spec)
+    assert small == scatter_chunk_bound(spec)      # tiny table: whole budget
+    # a table eating a quarter of the cache shrinks the block
+    mid = pick_chunk("scatter", 1 << 17, 4, spec)
+    assert mid < small
+    # spilled table: revert to the max block to amortize renorm sweeps
+    assert pick_chunk("scatter", 1 << 22, 4, spec) == \
+        scatter_chunk_bound(spec)
+    # pruning levels frees budget back
+    assert pick_chunk("scatter", 1 << 17, 4, spec, levels=(0, 1)) >= mid
+
+
+def test_radix_buckets_scaling():
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    assert radix_buckets(64, 1, spec) == 1
+    assert radix_buckets(1 << 20, 1, spec) == 2
+    assert radix_buckets(1 << 20, 8, spec) > 2
+    b = radix_buckets(1 << 24, 64, spec)
+    assert b == 64                                  # capped fan-out

@@ -19,7 +19,8 @@ from repro.core.aggregates import pad_and_chunk, segment_table
 from repro.core.types import ReproSpec
 from repro.kernels.segment_rsum.ops import segment_agg_kernel
 from repro.ops import groupby_agg, plan_groupby
-from repro.ops.plan import METHODS, default_chunk, onehot_block_bound
+from repro.ops.plan import (METHODS, default_chunk, onehot_block_bound,
+                            pick_chunk, scatter_chunk_bound)
 
 SPEC = ReproSpec(dtype=jnp.float32, L=2)
 ALL_AGGS = [("sum", 0), ("count",), ("mean", 0), ("var", 1), ("std", 1),
@@ -134,18 +135,23 @@ def test_sharded_groupby_device_count_invariance():
 # ---------------------------------------------------------------------------
 
 def test_planner_cost_model_dispatch():
-    small = plan_groupby(10**6, 64, SPEC)
-    mid = plan_groupby(10**6, 1 << 14, SPEC)
-    huge = plan_groupby(10**6, 1 << 20, SPEC)
+    # calibration=None pins the cold-start model: a machine-local
+    # .repro_calibration.json must not flip this test's expectations
+    small = plan_groupby(10**6, 64, SPEC, calibration=None)
+    mid = plan_groupby(10**6, 1 << 14, SPEC, calibration=None)
+    huge = plan_groupby(10**6, 1 << 20, SPEC, calibration=None)
     assert small.method == "onehot"
     assert mid.method == "scatter"
     assert huge.method == "sort"
+    assert huge.buckets > 1          # radix partitioning engaged
     assert "cost model" in small.reason
-    on_tpu = plan_groupby(10**6, 1 << 12, SPEC, backend="tpu")
+    on_tpu = plan_groupby(10**6, 1 << 12, SPEC, backend="tpu",
+                          calibration=None)
     assert on_tpu.method == "pallas"
     # f64 accumulators never plan onto the f32-only Pallas kernel
     f64 = ReproSpec(dtype=jnp.float64, L=2)
-    assert plan_groupby(10**6, 1 << 12, f64, backend="tpu").method != "pallas"
+    assert plan_groupby(10**6, 1 << 12, f64, backend="tpu",
+                        calibration=None).method != "pallas"
 
 
 def test_planner_explicit_method_and_chunk_clamp():
@@ -155,8 +161,12 @@ def test_planner_explicit_method_and_chunk_clamp():
     assert p.reason == "explicit request"
     with pytest.raises(ValueError):
         plan_groupby(1000, 8, SPEC, method="nope")
-    assert plan_groupby(1000, 8, SPEC, method="sort").chunk == \
-        default_chunk("sort", SPEC)
+    # chunk comes from the buffer-residency model: a tiny table leaves the
+    # whole cache budget to the block, so the pick saturates the overflow
+    # bound and never falls below the legacy fixed default
+    picked = plan_groupby(1000, 8, SPEC, method="sort").chunk
+    assert picked == pick_chunk("sort", 8, 1, SPEC)
+    assert default_chunk("sort", SPEC) <= picked <= scatter_chunk_bound(SPEC)
 
 
 def test_pad_and_chunk_shared_helper():

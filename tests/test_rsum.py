@@ -88,6 +88,12 @@ def test_chunked_matches_single_call(spec):
     chunked = float(rsum.finalize_state(*rsum.rsum_simd_chunked(x, spec, c=256,
                                                                 V=8), spec))
     assert np.float64(whole).tobytes() == np.float64(chunked).tobytes()
+    # non-multiple / degenerate c round UP to whole V*NB blocks (min one):
+    # the old inverted guard only bumped exact multiples
+    for c in (1, 100, 257, 0):
+        odd = float(rsum.finalize_state(
+            *rsum.rsum_simd_chunked(x, spec, c=c, V=8), spec))
+        assert np.float64(whole).tobytes() == np.float64(odd).tobytes()
 
 
 def test_agrees_with_fast_path_within_bound():
