@@ -77,7 +77,9 @@ def run(quick: bool = True):
     the sort->radix win at large G is visible."""
     n = 2**17 if quick else 2**22
     summary_counts = [2**k for k in (2, 6, 10, 14)]
-    sweep_counts = summary_counts + (
+    # G = 1 is the flat-SUM point where the rsum strategy exists; it feeds
+    # the sweep (and the rsum column) but not the historical fig7_summary
+    sweep_counts = [1] + summary_counts + (
         [2**k for k in (17, 20)] if quick else
         [2**k for k in range(16, 21, 2)])
     vals = jnp.asarray(uniform(n, seed=4))
@@ -103,9 +105,12 @@ def run(quick: bool = True):
                                       dspec=d))
         row["decimal9_slowdown"] = _ab_slowdown(f, base, vals, ids)
 
-        for method in ("scatter", "sort", "onehot"):
+        for method in ("scatter", "sort", "onehot", "rsum"):
             if method == "onehot" and g > 2**12:
                 row[f"{method}_slowdown"] = None   # dense matmul impractical
+                continue
+            if method == "rsum" and g != 1:
+                row[f"{method}_slowdown"] = None   # flat kernel: G == 1 only
                 continue
             f = jax.jit(functools.partial(
                 seg_mod.segment_rsum, num_segments=g, spec=spec,
@@ -117,17 +122,17 @@ def run(quick: bool = True):
     summary = {f"geomean_{m}": _geomean(head, f"{m}_slowdown")
                for m in ("scatter", "sort", "onehot", "decimal9")}
     sweep = {f"geomean_{m}": _geomean(rows, f"{m}_slowdown")
-             for m in ("scatter", "sort", "decimal9")}
+             for m in ("scatter", "sort", "decimal9", "rsum")}
 
     print("\n== Fig. 7/10 analogue: GROUPBY slowdown vs float32 ==")
     print(f"{'groups':>8} {'f32 ns/el':>10} {'decimal':>8} {'scatter':>8} "
-          f"{'sort':>8} {'onehot':>8} {'B':>4}")
+          f"{'sort':>8} {'onehot':>8} {'rsum':>8} {'B':>4}")
     for r in rows:
         fmt = lambda v: f"{v:8.2f}" if v else "       -"
         print(f"{r['n_groups']:>8} {r['float32_ns']:>10.2f} "
               f"{fmt(r['decimal9_slowdown'])} {fmt(r['scatter_slowdown'])} "
               f"{fmt(r['sort_slowdown'])} {fmt(r['onehot_slowdown'])} "
-              f"{r['sort_buckets']:>4}")
+              f"{fmt(r['rsum_slowdown'])} {r['sort_buckets']:>4}")
     print("Table III analogue (geomean slowdown):",
           {k: round(v, 2) for k, v in summary.items() if v})
     print("full-sweep geomeans (incl. large G):",
@@ -291,7 +296,20 @@ def cross_check():
     check("permuted rows",
           segment_table(vals[perm], ids[perm], g, spec, method="radix",
                         e1=e1))
-    print("bitwise cross-check OK (radix, pruned, pallas, permutation)")
+
+    # the flat rsum strategy exists only at G == 1: same adversarial values
+    # (zeros, denormals, 8-decade magnitude spread) keyed to a single group,
+    # full and prescan-pruned windows, against the scatter reference
+    ids0 = np.zeros(n, np.int32)
+    ref0 = segment_table(vals, ids0, 1, spec, method="scatter", e1=e1)
+    for name, kwargs in (("rsum", {}), ("pruned rsum", {"levels": window})):
+        acc0 = segment_table(vals, ids0, 1, spec, method="rsum", e1=e1,
+                             **kwargs)
+        for a, b in zip(ref0, acc0):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"cross-check: {name}")
+    print("bitwise cross-check OK (radix, pruned, pallas, rsum, "
+          "permutation)")
     return "ok"
 
 

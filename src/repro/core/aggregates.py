@@ -83,6 +83,9 @@ def scatter_chunk_bound(spec: ReproSpec) -> int:
 
 def default_chunk(method: str, spec: ReproSpec) -> int:
     """Per-method safe default for the summation-buffer size knob."""
+    if method == "rsum":
+        from repro.kernels.rsum.ops import max_block_rows
+        return max_block_rows(spec)
     if method in ("onehot", "pallas"):
         return onehot_block_bound(spec)
     return min(scatter_chunk_bound(spec), 4096)
@@ -357,8 +360,9 @@ def segment_table(values, segment_ids, num_segments: int, spec: ReproSpec,
     """Fused reproducible segment reduction: ``(n, *F) -> ReproAcc (G, *F, L)``.
 
     ``method`` must be an executable strategy name ('scatter' | 'sort' |
-    'radix' | 'onehot' | 'pallas') — ``'auto'`` resolution belongs to
-    :func:`repro.ops.plan.plan_groupby`.  ``e1`` may be scalar or any shape
+    'radix' | 'onehot' | 'pallas' | 'rsum') — ``'auto'`` resolution belongs
+    to :func:`repro.ops.plan.plan_groupby`.  'rsum' is the flat-aggregation
+    kernel and requires ``num_segments == 1``.  ``e1`` may be scalar or any shape
     broadcastable to ``F`` (per-column lattices); defaults to the per-feature
     row maximum, which every execution path shares so their tables are
     bit-identical.  ``levels`` is a static prescan-proved live-level window
@@ -373,6 +377,15 @@ def segment_table(values, segment_ids, num_segments: int, spec: ReproSpec,
     feat = values.shape[1:]
     if e1 is None:
         e1 = acc_mod.required_e1(values, spec, axis=0)       # (*F,)
+    if method == "rsum":
+        from repro.kernels.rsum.ops import rsum_table
+        flat = values.reshape(values.shape[0], -1)           # (n, prod(F))
+        acc = rsum_table(flat, segment_ids, num_segments, spec,
+                         e1=_feat_e1(e1, feat).reshape(-1),
+                         block_rows=chunk, levels=levels)
+        return ReproAcc(k=acc.k.reshape(num_segments, *feat, spec.L),
+                        C=acc.C.reshape(num_segments, *feat, spec.L),
+                        e1=acc.e1.reshape(num_segments, *feat))
     if method == "pallas":
         from repro.kernels.segment_rsum.ops import segment_agg_kernel
         flat = values.reshape(values.shape[0], -1)           # (n, prod(F))

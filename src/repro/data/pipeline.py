@@ -32,11 +32,21 @@ class DataConfig:
 
 
 def synth_quantum(dcfg: DataConfig, step: int, quantum: int):
-    """One sequence (the accumulation quantum): pure function of indices."""
+    """One sequence (the accumulation quantum): pure function of indices.
+
+    Tokens are Zipf(1.2)-distributed over the vocab rather than uniform: a
+    uniform stream has optimal cross-entropy ln(vocab) == the init loss, so
+    nothing is learnable and training-smoke assertions degenerate to testing
+    optimizer noise.  The skewed unigram gives models a real signal while
+    keeping the determinism contract (content is a pure function of
+    (seed, step, quantum), never of mesh shape or host count).
+    """
     key = jax.random.fold_in(
         jax.random.fold_in(jax.random.PRNGKey(dcfg.seed), step), quantum)
-    toks = jax.random.randint(key, (dcfg.seq_len + 1,), 0, dcfg.vocab,
-                              dtype=jnp.int32)
+    ranks = jnp.arange(dcfg.vocab, dtype=jnp.float32) + 1.0
+    logits = -1.2 * jnp.log(ranks)
+    toks = jax.random.categorical(
+        key, logits, shape=(dcfg.seq_len + 1,)).astype(jnp.int32)
     return toks
 
 

@@ -1,14 +1,16 @@
 """Pallas TPU kernel: flat reproducible sum (RSUM, paper §III-D).
 
-TPU adaptation of the paper's AVX kernel (DESIGN.md §3.3):
+TPU adaptation of the paper's AVX kernel (DESIGN.md §3.3/§12):
 
 * the V SIMD lanes become the 128 VPU lanes; per-lane running sums live in a
-  VMEM scratch accumulator of shape (L, 128) as exact integer window offsets;
+  VMEM scratch accumulator of shape (L, ncols, 128) as exact integer window
+  offsets — one independent ladder per fused output column;
 * the paper's NB-element carry-propagation cadence becomes one renorm per
-  grid block (block_rows * 2^(W-1) is kept below 2^30, so the int32 window
-  arithmetic can never overflow between renorms);
+  grid block (block_rows * 2^(W-1) is kept below 2^30 by ops.max_block_rows,
+  so the int32 window arithmetic can never overflow between renorms);
 * extraction against fixed lattice extractors A^(l) = 1.5 * 2^(e_l) runs on
-  the VPU as two float adds + one multiply + int convert per level;
+  the VPU as two float adds + one multiply + int convert per live level (the
+  ladder is window-agnostic: callers hand it a prescan-pruned sub-ladder);
 * the horizontal merge (paper Eq. 2/3) happens outside the kernel as an exact
   integer lane reduction (ops.py).
 
@@ -24,7 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-LANES = 128
+LANES = 128      # VPU lane width: last-dim tile
+SUBLANES = 8     # f32 sublane tile: block_rows must be a multiple of this
 
 
 def _rsum_kernel(x_ref, a_ref, iu_ref, k_out, c_out, k_acc, c_acc,
@@ -37,13 +40,15 @@ def _rsum_kernel(x_ref, a_ref, iu_ref, k_out, c_out, k_acc, c_acc,
         k_acc[...] = jnp.zeros_like(k_acc)
         c_acc[...] = jnp.zeros_like(c_acc)
 
-    r = x_ref[...]                                   # (rows, 128) float32
+    r = x_ref[...]                                   # (ncols, rows, 128) f32
     for l in range(L):
-        A = a_ref[l, 0]
+        A = a_ref[l, :].reshape(-1, 1, 1)            # per-column extractor
         q = (r + A) - A                              # EFT vs fixed extractor
         r = r - q                                    # exact remainder
-        k = (q * iu_ref[l, 0]).astype(jnp.int32)     # exact: q = k * ulp
-        k_acc[l, :] += jnp.sum(k, axis=0)            # rows*2^(W-1) < 2^30
+        k = (q * iu_ref[l, :].reshape(-1, 1, 1)).astype(jnp.int32)
+        # dtype pinned: rows * 2^(W-1) < 2^30 (ops.max_block_rows), and an
+        # unpinned sum would promote to int64 under jax_enable_x64
+        k_acc[l, :, :] += jnp.sum(k, axis=1, dtype=jnp.int32)
 
     kk = k_acc[...]
     d = kk >> (m - 2)                                # renorm (carry prop.)
@@ -56,32 +61,38 @@ def _rsum_kernel(x_ref, a_ref, iu_ref, k_out, c_out, k_acc, c_acc,
         c_out[...] = c_acc[...]
 
 
-def rsum_pallas_call(x2d, A, inv_ulp, *, L: int, m: int, block_rows: int,
+def rsum_pallas_call(x3d, A, inv_ulp, *, L: int, m: int, block_rows: int,
                      interpret: bool):
-    """Launch the kernel.  x2d: (rows_total, 128) f32 with rows_total a
-    multiple of block_rows; A/inv_ulp: (L, 1) f32.  Returns per-lane
-    (k, C): (L, 128) int32 each."""
-    nblk = x2d.shape[0] // block_rows
+    """Launch the kernel.
+
+    ``x3d``: (ncols, rows_total, 128) f32 with rows_total a multiple of
+    block_rows; ``A``/``inv_ulp``: (L, ncols) f32 per-column extractor
+    ladders (L is the *live* level count — possibly a pruned window).
+    Returns per-lane (k, C): (L, ncols, 128) int32 each.
+    """
+    ncols, rows_total, lanes = x3d.shape
+    assert lanes == LANES and rows_total % block_rows == 0
+    nblk = rows_total // block_rows
     kernel = functools.partial(_rsum_kernel, L=L, m=m)
     return pl.pallas_call(
         kernel,
         grid=(nblk,),
         in_specs=[
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((L, 1), lambda i: (0, 0)),
-            pl.BlockSpec((L, 1), lambda i: (0, 0)),
+            pl.BlockSpec((ncols, block_rows, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((L, ncols), lambda i: (0, 0)),
+            pl.BlockSpec((L, ncols), lambda i: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((L, LANES), lambda i: (0, 0)),
-            pl.BlockSpec((L, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((L, ncols, LANES), lambda i: (0, 0, 0)),
+            pl.BlockSpec((L, ncols, LANES), lambda i: (0, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((L, LANES), jnp.int32),
-            jax.ShapeDtypeStruct((L, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((L, ncols, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((L, ncols, LANES), jnp.int32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((L, LANES), jnp.int32),
-            pltpu.VMEM((L, LANES), jnp.int32),
+            pltpu.VMEM((L, ncols, LANES), jnp.int32),
+            pltpu.VMEM((L, ncols, LANES), jnp.int32),
         ],
         interpret=interpret,
-    )(x2d, A, inv_ulp)
+    )(x3d, A, inv_ulp)

@@ -1,11 +1,13 @@
-"""Pure-jnp oracle for the flat reproducible-sum kernel."""
+"""Pure-jnp oracles for the flat reproducible-sum kernel."""
 from __future__ import annotations
+
+import jax.numpy as jnp
 
 from repro.core import accumulator as acc_mod
 from repro.core.accumulator import ReproAcc
 from repro.core.types import ReproSpec
 
-__all__ = ["rsum_ref", "rsum_acc_ref"]
+__all__ = ["rsum_ref", "rsum_acc_ref", "rsum_table_ref"]
 
 
 def rsum_acc_ref(x, spec: ReproSpec = ReproSpec()) -> ReproAcc:
@@ -15,3 +17,12 @@ def rsum_acc_ref(x, spec: ReproSpec = ReproSpec()) -> ReproAcc:
 
 def rsum_ref(x, spec: ReproSpec = ReproSpec()):
     return acc_mod.finalize(rsum_acc_ref(x, spec), spec)
+
+
+def rsum_table_ref(values, spec: ReproSpec = ReproSpec(), e1=None) -> ReproAcc:
+    """Stacked (1, ncols, L) oracle — must match ops.rsum_table bitwise."""
+    values = jnp.asarray(values, spec.dtype)
+    if values.ndim == 1:
+        values = values[:, None]
+    acc = acc_mod.from_values(values, spec, axis=0, e1=e1)   # (ncols, L)
+    return ReproAcc(k=acc.k[None], C=acc.C[None], e1=acc.e1[None])

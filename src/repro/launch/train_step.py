@@ -269,7 +269,7 @@ def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig,
             if spec is None:
                 total = total + jnp.sum(sq)
             else:
-                acc = acc_mod.merge(acc, acc_mod.from_values(
+                acc = acc_mod.merge(acc, grad_mod.flat_sum_acc(
                     sq.astype(spec.dtype), spec), spec)
         if spec is None:
             return jnp.sqrt(lax.psum(total, dpx))

@@ -145,11 +145,12 @@ def default_grid(quick: bool = True):
     """(n, G, ncols) shapes to measure.  Small on purpose: calibration cost
     is paid once per machine, but 'once' should still be seconds."""
     if quick:
-        return [(1 << 15, 1 << 4, 1), (1 << 15, 1 << 10, 1),
+        return [(1 << 15, 1, 1), (1 << 15, 1, 4),
+                (1 << 15, 1 << 4, 1), (1 << 15, 1 << 10, 1),
                 (1 << 15, 1 << 16, 1), (1 << 15, 1 << 10, 4)]
     return [(n, g, c)
             for n in (1 << 15, 1 << 18)
-            for g in (1 << 4, 1 << 10, 1 << 16, 1 << 20)
+            for g in (1, 1 << 4, 1 << 10, 1 << 16, 1 << 20)
             for c in (1, 4)]
 
 
@@ -170,6 +171,8 @@ def calibrate(spec: ReproSpec | None = None, methods=None, grid=None,
         methods = ["scatter", "sort", "onehot"]
         if backend == "tpu" and spec.m <= 30:
             methods.append("pallas")
+        if spec.m <= 30:
+            methods.append("rsum")      # measured only at its G == 1 shapes
     grid = list(grid if grid is not None else default_grid(quick))
     key = spec_key(spec)
     points = []
@@ -177,6 +180,8 @@ def calibrate(spec: ReproSpec | None = None, methods=None, grid=None,
         for n, g, ncols in grid:
             if method in ("onehot", "pallas") and g > _ONEHOT_G_CAP:
                 continue
+            if method == "rsum" and g != 1:
+                continue                # the flat kernel only exists at G==1
             ns = measure(method, n, g, ncols, spec)
             points.append({"backend": backend, "spec": key, "method": method,
                            "n": n, "G": g, "ncols": ncols,
@@ -200,7 +205,7 @@ def calibrate(spec: ReproSpec | None = None, methods=None, grid=None,
 # IDW extrapolation is harmless for methods whose per-row cost is ~G-free
 # (scatter/sort) but badly wrong for the G-linear dense paths, which are
 # also the ones the grid deliberately caps — those get no margin at all
-_COVERAGE_MARGIN = {"onehot": 1, "pallas": 1}
+_COVERAGE_MARGIN = {"onehot": 1, "pallas": 1, "rsum": 1}
 _DEFAULT_MARGIN = 4
 
 

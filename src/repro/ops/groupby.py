@@ -211,7 +211,8 @@ def groupby_agg(values, keys, num_segments: int, aggs=("sum",),
                     'mean'.
       spec:         accumulator format; default ``ReproSpec()`` (f32, L=2).
       method:       'auto' (cost-model planner) or an explicit strategy:
-                    'onehot' | 'scatter' | 'sort' | 'radix' | 'pallas'.
+                    'onehot' | 'scatter' | 'sort' | 'radix' | 'pallas' |
+                    'rsum' (flat kernel; G == 1 only).
       chunk:        summation-buffer size knob (clamped to safe bounds).
       return_table: also return the raw accumulator table ``ReproAcc
                     (G, ncols, L)`` (for exact cross-fragment merging).

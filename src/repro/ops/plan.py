@@ -1,7 +1,8 @@
 """Cost-model planner for reproducible GROUPBY (DESIGN.md §10/§11).
 
-Every execution path — jnp onehot / scatter / radix (a.k.a. sort) and the
-Pallas MXU kernel — returns bit-identical accumulator tables, so method
+Every execution path — jnp onehot / scatter / radix (a.k.a. sort), the
+Pallas MXU segment kernel, and the Pallas VPU flat kernel (``rsum``, valid
+only at G == 1) — returns bit-identical accumulator tables, so method
 choice is *purely* a performance decision.  This module makes that decision
 explicit and auditable: :func:`plan_groupby` returns the strategy, the
 summation-buffer size (``chunk``), the radix fan-out (``buckets``) and one
@@ -52,7 +53,7 @@ __all__ = [
     "table_bytes", "radix_buckets", "METHODS",
 ]
 
-METHODS = ("onehot", "scatter", "sort", "radix", "pallas")
+METHODS = ("onehot", "scatter", "sort", "radix", "pallas", "rsum")
 
 _LANES = 128          # TPU VPU lane width
 _CPU_LANES = 8        # effective XLA:CPU one-hot throughput (measured:
@@ -67,6 +68,9 @@ _CACHE_BYTES = DEFAULT_CACHE_BYTES
 
 
 def _clamp_chunk(method: str, chunk: int, spec: ReproSpec) -> int:
+    if method == "rsum":
+        from repro.kernels.rsum.ops import max_block_rows
+        return min(chunk, max_block_rows(spec))
     if method in ("onehot", "pallas"):
         return min(chunk, onehot_block_bound(spec))
     return min(chunk, scatter_chunk_bound(spec))
@@ -80,6 +84,12 @@ def pick_chunk(method: str, num_segments: int, ncols: int, spec: ReproSpec,
     in the cache budget beside the (sub-)table, clamped to the per-method
     exactness/overflow bound.  When even the table spills, the block reverts
     to the safe default — blocking cannot buy residency back."""
+    if method == "rsum":
+        # flat kernel: chunk is its block_rows, bounded by int32 overflow
+        # and the VMEM footprint of the (ncols, rows, 128) block + the
+        # live-level scratch (see kernels.rsum.ops.max_block_rows)
+        from repro.kernels.rsum.ops import max_block_rows
+        return max_block_rows(spec, ncols, levels)
     if method in ("onehot", "pallas"):
         return onehot_block_bound(spec)
     bound = scatter_chunk_bound(spec)
@@ -102,7 +112,7 @@ def pick_chunk(method: str, num_segments: int, ncols: int, spec: ReproSpec,
 class GroupbyPlan:
     """An executable dispatch decision: strategy + buffer sizes + rationale."""
 
-    method: str          # 'onehot' | 'scatter' | 'sort' | 'radix' | 'pallas'
+    method: str          # 'onehot'|'scatter'|'sort'|'radix'|'pallas'|'rsum'
     chunk: int           # rows per block between renormalizations
     cost: float          # per-row cost (0.0 for explicit requests)
     reason: str          # one line of cost-model rationale
@@ -131,6 +141,10 @@ def plan_groupby(n: int, num_segments: int, spec: ReproSpec, ncols: int = 1,
         if method not in METHODS:
             raise ValueError(f"unknown method {method!r}; want one of "
                              f"{('auto',) + METHODS}")
+        if method == "rsum" and num_segments != 1:
+            raise ValueError("method 'rsum' is the flat-aggregation kernel: "
+                             f"it requires num_segments == 1, got "
+                             f"{num_segments}")
         c = _clamp_chunk(
             method, chunk or pick_chunk(method, num_segments, ncols, spec,
                                         levels), spec)
@@ -147,6 +161,10 @@ def plan_groupby(n: int, num_segments: int, spec: ReproSpec, ncols: int = 1,
     candidates = ["onehot", "scatter", "sort"]
     if backend == "tpu" and spec.m <= 30:
         candidates.append("pallas")
+    if num_segments == 1 and spec.m <= 30:
+        # the flat-sum kernel: only valid with a single group (SQL SUM
+        # without GROUP BY, gradient-norm reductions)
+        candidates.append("rsum")
 
     costs, source = None, "model"
     if cal is not None:
@@ -179,6 +197,14 @@ def plan_groupby(n: int, num_segments: int, spec: ReproSpec, ncols: int = 1,
         if "pallas" in candidates:
             costs["pallas"] = extract + \
                 nlev * num_segments / (_LANES * _MXU_DEPTH)
+        if "rsum" in candidates:
+            # per-lane int adds, no one-hot operand to materialize and no
+            # table to index: half the G=1 MXU path's per-row work on TPU.
+            # Off-TPU the kernel runs in interpret mode — price it out of
+            # the cold race (only measurement can bring it back).
+            costs["rsum"] = extract + (
+                0.5 * nlev / (_LANES * _MXU_DEPTH) if backend == "tpu"
+                else 1e3 * nlev)
 
     best = min(costs, key=costs.get)
     tb = table_bytes(num_segments, ncols, spec, levels)

@@ -124,6 +124,27 @@ def reduce_grads(accs_or_grads, spec: Optional[ReproSpec], axis_names,
     return jax.tree.map(lambda x: x / n_quanta_global, g)
 
 
+def flat_sum_acc(x, spec: ReproSpec) -> ReproAcc:
+    """Planner-routed reproducible flat sum (the G == 1 aggregation).
+
+    Gradient-norm sums are exactly the planner's single-group case: consult
+    :func:`repro.ops.plan.plan_groupby` once per (static) shape and run the
+    Pallas ``rsum`` kernel when it wins the cost race (TPU backend, or a
+    measured calibration says so); otherwise the jnp lattice fast path.
+    Both paths produce bit-identical canonical accumulators, so the routing
+    can never change a clip decision (DESIGN.md §12).
+    """
+    x = jnp.asarray(x, spec.dtype).reshape(-1)
+    from repro.ops.plan import plan_groupby
+    plan = plan_groupby(int(x.shape[0]), 1, spec)
+    if plan.method == "rsum":
+        from repro.kernels.rsum.ops import rsum_table
+        t = rsum_table(x[:, None], num_segments=1, spec=spec,
+                       block_rows=plan.chunk)
+        return ReproAcc(k=t.k[0, 0], C=t.C[0, 0], e1=t.e1[0, 0])
+    return acc_mod.from_values(x, spec)
+
+
 def repro_global_norm(grads, spec: Optional[ReproSpec]):
     """sqrt of a reproducible sum of squared gradient entries.
 
@@ -136,5 +157,5 @@ def repro_global_norm(grads, spec: Optional[ReproSpec]):
     acc = acc_mod.zeros(spec)
     for g in jax.tree.leaves(grads):
         sq = jnp.square(g.astype(spec.dtype)).reshape(-1)
-        acc = acc_mod.merge(acc, acc_mod.from_values(sq, spec), spec)
+        acc = acc_mod.merge(acc, flat_sum_acc(sq, spec), spec)
     return jnp.sqrt(acc_mod.finalize(acc, spec))

@@ -50,19 +50,21 @@ def _assert_same(ref, got):
 
 @pytest.mark.parametrize("method", METHODS)
 def test_every_aggregate_bitwise_across_methods(method):
-    vals, ids = _data(4097, 33, seed=1)           # odd n forces padding
-    ref = groupby_agg(vals, ids, 33, ALL_AGGS, SPEC, method="scatter")
-    got = groupby_agg(vals, ids, 33, ALL_AGGS, SPEC, method=method)
+    g = 1 if method == "rsum" else 33      # the flat kernel is G == 1 only
+    vals, ids = _data(4097, g, seed=1)     # odd n forces padding
+    ref = groupby_agg(vals, ids, g, ALL_AGGS, SPEC, method="scatter")
+    got = groupby_agg(vals, ids, g, ALL_AGGS, SPEC, method=method)
     _assert_same(ref, got)
 
 
 @pytest.mark.parametrize("method", METHODS)
 @pytest.mark.parametrize("chunk", [64, 1024])
 def test_permutation_and_chunk_invariance_bitwise(method, chunk):
-    vals, ids = _data(3001, 17, seed=2)
-    ref = groupby_agg(vals, ids, 17, ALL_AGGS, SPEC, method="scatter")
+    g = 1 if method == "rsum" else 17      # the flat kernel is G == 1 only
+    vals, ids = _data(3001, g, seed=2)
+    ref = groupby_agg(vals, ids, g, ALL_AGGS, SPEC, method="scatter")
     perm = np.random.default_rng(3).permutation(len(ids))
-    got = groupby_agg(vals[perm], ids[perm], 17, ALL_AGGS, SPEC,
+    got = groupby_agg(vals[perm], ids[perm], g, ALL_AGGS, SPEC,
                       method=method, chunk=chunk)
     _assert_same(ref, got)
 

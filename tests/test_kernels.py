@@ -52,6 +52,45 @@ def test_rsum_kernel_block_invariance(block_rows):
 
 
 @pytest.mark.parametrize("spec", SPECS, ids=str)
+@pytest.mark.parametrize("n,ncols", [(1, 1), (127, 3), (8192, 4),
+                                     (100_001, 2)])
+def test_rsum_table_matches_oracle(spec, n, ncols):
+    """The fused multi-column strategy layout: (n, ncols) -> (1, ncols, L)."""
+    rng = np.random.default_rng(n + ncols)
+    x = (rng.standard_normal((n, ncols)) * 5).astype(np.float32)
+    got = rsum_ops.rsum_table(x, num_segments=1, spec=spec, interpret=True)
+    want = rsum_ref.rsum_table_ref(x, spec)
+    assert got.k.shape == (1, ncols, spec.L)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rsum_table_pruned_window_bit_identity():
+    """A prescan-proved level window changes FLOPs, never bits."""
+    from repro.core import prescan
+    spec = ReproSpec(dtype=jnp.float32, L=3)
+    # integer-valued floats: the bottom levels are provably dead
+    x = jnp.asarray(np.random.default_rng(1).integers(
+        -1000, 1000, (4000, 2)).astype(np.float32))
+    e1 = acc_mod.required_e1(x, spec, axis=0)
+    lo, hi = prescan.static_window(x, e1, spec)
+    assert (lo, hi) != (0, spec.L)          # something actually pruned
+    full = rsum_ops.rsum_table(x, num_segments=1, spec=spec, e1=e1,
+                               interpret=True)
+    win = rsum_ops.rsum_table(x, num_segments=1, spec=spec, e1=e1,
+                              levels=(lo, hi), interpret=True)
+    for a, b in zip(win, full):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rsum_table_rejects_multiple_groups():
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    with pytest.raises(ValueError, match="num_segments"):
+        rsum_ops.rsum_table(np.ones((8, 1), np.float32), num_segments=4,
+                            spec=spec, interpret=True)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
 @pytest.mark.parametrize("n,g", [(1000, 1), (1000, 16), (4096, 100),
                                  (20_000, 700)])
 def test_segment_kernel_matches_oracle(spec, n, g):

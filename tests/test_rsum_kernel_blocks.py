@@ -1,0 +1,205 @@
+"""Block-level differential harness for the flat rsum Pallas kernel.
+
+Instead of only observing end-to-end oracle mismatches, this harness runs
+the kernel one grid step at a time (in interpret mode, by truncating the
+input to the first b blocks — the final-block flush then exposes the
+accumulator state *after* block b) and compares every intermediate (k, C)
+lane state against an independent numpy model of the kernel body.  A
+renorm-cadence or carry-propagation bug is pinpointed to the first diverging
+block rather than smeared over the whole reduction.
+
+Stress inputs cover the ISSUE's failure hypotheses: denormals (must extract
+to k == 0 everywhere), ±cancellation (negative in-flight window sums, so
+the arithmetic-shift renorm runs on negative ints), and near-2^(W-1)
+per-lane contributions that force carries within a few blocks.
+
+Also the ``max_block_rows`` regression suite (satellite 3): lane-tile
+clamping, the W=12 VMEM/level-count bound, and ragged n % 128 != 0 inputs
+whose zero-padded tail must provably contribute k == 0.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accumulator as acc_mod
+from repro.core import eft
+from repro.core.types import ReproSpec
+from repro.kernels.rsum import ops as rsum_ops
+from repro.kernels.rsum import ref as rsum_ref
+from repro.kernels.rsum.kernel import LANES, SUBLANES, rsum_pallas_call
+
+SPECS = [
+    ReproSpec(dtype=jnp.float32, L=1),
+    ReproSpec(dtype=jnp.float32, L=2),
+    ReproSpec(dtype=jnp.float32, L=3),
+    ReproSpec(dtype=jnp.float32, L=2, W=12),
+]
+
+NBLK = 3
+
+
+def _make_input(kind: str, n: int, spec: ReproSpec) -> np.ndarray:
+    rng = np.random.default_rng(hash((kind, n, spec.W)) % 2**31)
+    if kind == "denormal":
+        # subnormal magnitudes interleaved with normal values: denormals
+        # must extract to k == 0 at every level and never perturb the sums
+        tiny = np.float32(1.4e-45) * rng.integers(1, 200, n)
+        normal = (rng.standard_normal(n) * 0.25).astype(np.float32)
+        x = np.where(rng.random(n) < 0.4, tiny.astype(np.float32), normal)
+        x[0] = np.float32(1.0)          # anchor the lattice at a normal e1
+        return x.astype(np.float32)
+    if kind == "cancel":
+        # exact ± pairs plus noise: in-flight per-lane window sums go
+        # negative, exercising the arithmetic-shift (floor) renorm
+        half = (rng.standard_normal(n // 2) * 1e3).astype(np.float32)
+        noise = (rng.standard_normal(n - 2 * (n // 2)) * 1e-3
+                 ).astype(np.float32)
+        x = np.concatenate([half, -half, noise])
+        rng.shuffle(x)
+        return x.astype(np.float32)
+    assert kind == "carry"
+    # same-sign values near the admission bound: per-lane, per-block sums
+    # approach block_rows * 2^(W-1), forcing window carries every block or
+    # two (near-instant renorm-cadence divergence if the cadence is wrong)
+    base = np.float32(1000.0)
+    jitter = (rng.random(n) * 64).astype(np.float32)
+    return (base + jitter).astype(np.float32)
+
+
+def _ladder(x: np.ndarray, spec: ReproSpec):
+    """The same per-level extractor ladder ops.rsum_table builds."""
+    e1 = int(acc_mod.required_e1(jnp.asarray(x), spec))
+    es = jnp.asarray(e1 - np.arange(spec.L) * spec.W, jnp.int32)
+    A = np.asarray(eft.extractor(es, spec.dtype), np.float32)
+    inv_ulp = np.asarray(eft.pow2(spec.m - es, spec.dtype), np.float32)
+    return A.reshape(spec.L, 1), inv_ulp.reshape(spec.L, 1)
+
+
+def _np_block_states(x3d, A, inv_ulp, m: int, block_rows: int):
+    """Numpy reference of the kernel body: per-block (k_acc, c_acc) states.
+
+    Same float32 EFT, same int accumulation, same one-renorm-per-block
+    cadence — but in int64, asserting the int32 no-overflow invariant that
+    ``max_block_rows`` is supposed to guarantee.
+    """
+    ncols, rows_total, lanes = x3d.shape
+    L = A.shape[0]
+    k_acc = np.zeros((L, ncols, lanes), np.int64)
+    c_acc = np.zeros((L, ncols, lanes), np.int64)
+    states = []
+    for b in range(rows_total // block_rows):
+        r = x3d[:, b * block_rows:(b + 1) * block_rows, :].astype(np.float32)
+        for l in range(L):
+            Al = A[l].reshape(ncols, 1, 1).astype(np.float32)
+            q = ((r + Al) - Al).astype(np.float32)      # f32 EFT, like VPU
+            r = (r - q).astype(np.float32)
+            k = (q * inv_ulp[l].reshape(ncols, 1, 1)).astype(np.int64)
+            k_acc[l] += k.sum(axis=1)
+        assert np.abs(k_acc).max() < 2**31, "int32 overflow inside a block"
+        d = k_acc >> (m - 2)
+        k_acc = k_acc - (d << (m - 2))
+        c_acc = c_acc + d
+        states.append((k_acc.astype(np.int32), c_acc.astype(np.int32)))
+    return states
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+@pytest.mark.parametrize("block_rows", [8, 64, 1024])
+@pytest.mark.parametrize("kind", ["denormal", "cancel", "carry"])
+def test_blockwise_states_match_numpy(spec, block_rows, kind):
+    n = block_rows * LANES * NBLK
+    x = _make_input(kind, n, spec)
+    A, inv_ulp = _ladder(x, spec)
+    x3d = x.reshape(1, -1, LANES)
+    want = _np_block_states(x3d, A, inv_ulp, spec.m, block_rows)
+    for b in range(NBLK):
+        # truncating to the first b+1 blocks makes the final-block flush
+        # emit the state *after* block b — one grid step at a time
+        part = jnp.asarray(x3d[:, :(b + 1) * block_rows, :])
+        k_l, c_l = rsum_pallas_call(part, jnp.asarray(A),
+                                    jnp.asarray(inv_ulp), L=spec.L,
+                                    m=spec.m, block_rows=block_rows,
+                                    interpret=True)
+        np.testing.assert_array_equal(np.asarray(k_l), want[b][0],
+                                      err_msg=f"k diverges at block {b}")
+        np.testing.assert_array_equal(np.asarray(c_l), want[b][1],
+                                      err_msg=f"C diverges at block {b}")
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+@pytest.mark.parametrize("kind", ["denormal", "cancel", "carry"])
+def test_stress_inputs_match_oracle_end_to_end(spec, kind):
+    """The same adversarial inputs through the public ops path."""
+    x = _make_input(kind, 10_000, spec)
+    got = rsum_ops.rsum_acc(x, spec, block_rows=8, interpret=True)
+    want = rsum_ref.rsum_acc_ref(x, spec)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: max_block_rows guard + ragged-tail zero padding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+@pytest.mark.parametrize("n", [1, 7, 129, 1000, 12_345])
+def test_ragged_n_zero_padding(spec, n):
+    """n % 128 != 0 (mostly): the zero-padded tail block must contribute
+    k == 0 at every level, so the result equals the oracle bitwise."""
+    rng = np.random.default_rng(n)
+    x = (rng.standard_normal(n) * 11).astype(np.float32)
+    for block_rows in (8, 64):
+        got = rsum_ops.rsum_acc(x, spec, block_rows=block_rows,
+                                interpret=True)
+        want = rsum_ref.rsum_acc_ref(x, spec)
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_max_block_rows_bounds(spec):
+    for ncols in (1, 4, 16):
+        for levels in (None, (0, 1)):
+            rows = rsum_ops.max_block_rows(spec, ncols, levels)
+            assert rows % SUBLANES == 0 and rows >= SUBLANES
+            # overflow bound: one renorm per block from a canonical state
+            assert rows * (1 << (spec.W - 1)) <= 1 << 30
+            # VMEM bound: input block + both scratch accumulators fit
+            nlev = levels[1] - levels[0] if levels else spec.L
+            footprint = (ncols * rows * LANES * 4
+                         + 2 * nlev * ncols * LANES * 4)
+            assert footprint <= rsum_ops.VMEM_BUDGET_BYTES
+
+
+def test_w12_bound_is_vmem_limited():
+    """For W=12 the pure overflow bound (2^19 rows = a 256 MiB block) is
+    absurd; the level-count-aware VMEM term must bind instead."""
+    spec = ReproSpec(dtype=jnp.float32, L=2, W=12)
+    rows = rsum_ops.max_block_rows(spec)
+    assert rows < 1 << (30 - (spec.W - 1))
+    assert rows * LANES * 4 <= rsum_ops.VMEM_BUDGET_BYTES
+    # more fused columns -> smaller block, same budget
+    assert rsum_ops.max_block_rows(spec, ncols=8) <= rows // 4
+
+
+def test_oversized_block_rows_is_clamped():
+    """An absurd explicit block_rows must be clamped, not crash/overflow."""
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    x = (np.random.default_rng(0).standard_normal(5000) * 3).astype(
+        np.float32)
+    got = rsum_ops.rsum_acc(x, spec, block_rows=10**9, interpret=True)
+    want = rsum_ref.rsum_acc_ref(x, spec)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_non_tile_block_rows_is_floored():
+    """block_rows not a multiple of the sublane tile is floored to one."""
+    spec = ReproSpec(dtype=jnp.float32, L=2)
+    x = (np.random.default_rng(1).standard_normal(4001) * 3).astype(
+        np.float32)
+    for br in (3, 13, 127):
+        got = rsum_ops.rsum_acc(x, spec, block_rows=br, interpret=True)
+        want = rsum_ref.rsum_acc_ref(x, spec)
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
