@@ -25,6 +25,10 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.obs import fingerprint as obs_fp
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 SEP = "/"
 
 
@@ -55,29 +59,60 @@ def _unflatten(flat: dict, skeleton):
 
 def save(directory: str, step: int, tree, extra: Optional[dict] = None,
          keep: int = 3):
-    """Synchronous atomic save.  ``extra``: JSON-serializable metadata."""
-    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
-    final = os.path.join(directory, f"step_{step:08d}")
-    tmp = os.path.join(directory, f".tmp-step_{step:08d}")
-    os.makedirs(tmp, exist_ok=True)
-    npz_path = os.path.join(tmp, "arrays.npz")
-    np.savez(npz_path, **flat)
-    with open(npz_path, "rb") as f:
-        digest = hashlib.sha256(f.read()).hexdigest()
-    manifest = {
-        "step": step,
-        "sha256": digest,
-        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-                   for k, v in flat.items()},
-        "extra": extra or {},
-    }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
-    _gc(directory, keep)
+    """Synchronous atomic save.  ``extra``: JSON-serializable metadata.
+
+    The manifest carries two digests: ``sha256`` of the npz file (storage
+    integrity — detects corruption) and ``tree_fingerprint`` under the
+    repro.obs byte-layout contract (value identity — comparable against a
+    live pytree or another checkpoint regardless of npz compression
+    details), plus the run-manifest environment stamp so restore-side
+    mismatches are diagnosable."""
+    with obs_trace.span("ckpt.save", step=step) as sp:
+        flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = os.path.join(directory, f".tmp-step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        npz_path = os.path.join(tmp, "arrays.npz")
+        np.savez(npz_path, **flat)
+        with open(npz_path, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        tree_fp = obs_fp.fingerprint_pytree(flat)
+        manifest = {
+            "step": step,
+            "sha256": digest,
+            "tree_fingerprint": tree_fp,
+            "env": obs_fp.run_manifest(),
+            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in flat.items()},
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(directory, keep)
+        nbytes = os.path.getsize(npz_path.replace(tmp, final))
+        sp.set(bytes=nbytes, fingerprint=tree_fp)
+        obs_metrics.counter("ckpt_saves_total").inc()
+        obs_metrics.gauge("ckpt_last_bytes").set(nbytes)
     return final
+
+
+def checkpoint_fingerprint(directory: str,
+                           step: Optional[int] = None) -> dict:
+    """The stored digests of a checkpoint, without loading its arrays:
+    {step, sha256 (npz file), tree_fingerprint (byte-layout contract)}.
+    ``tree_fingerprint`` is absent from pre-obs checkpoints."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    return {"step": manifest["step"], "sha256": manifest["sha256"],
+            "tree_fingerprint": manifest.get("tree_fingerprint")}
 
 
 def _gc(directory: str, keep: int):
@@ -128,21 +163,25 @@ def restore(directory: str, skeleton, step: Optional[int] = None,
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    npz_path = os.path.join(path, "arrays.npz")
-    if verify:
-        with open(npz_path, "rb") as f:
-            digest = hashlib.sha256(f.read()).hexdigest()
-        if digest != manifest["sha256"]:
-            raise IOError(f"checkpoint {path} corrupt (sha mismatch)")
-    data = np.load(npz_path)
-    flat = {k: data[k] for k in data.files}
-    tree = _unflatten(flat, skeleton)
-    if shardings is not None:
-        tree = jax.tree.map(
-            lambda x, s: jax.device_put(x, s) if s is not None else
-            jax.device_put(x), tree, shardings)
-    else:
-        tree = jax.tree.map(jax.numpy.asarray, tree)
+    with obs_trace.span("ckpt.restore", step=step):
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        npz_path = os.path.join(path, "arrays.npz")
+        if verify:
+            with open(npz_path, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            if digest != manifest["sha256"]:
+                raise IOError(f"checkpoint {path} corrupt (sha mismatch)")
+        data = np.load(npz_path)
+        flat = {k: data[k] for k in data.files}
+        tree = _unflatten(flat, skeleton)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else
+                jax.device_put(x), tree, shardings)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        obs_metrics.counter("ckpt_restores_total").inc()
+        obs_trace.event("ckpt.restored", step=step,
+                        fingerprint=manifest.get("tree_fingerprint"))
     return tree, manifest["extra"]

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import hashlib
 import logging
 import os
 import time
@@ -36,8 +37,12 @@ from repro.launch.mesh import dp_axes, dp_size, make_host_mesh, \
 from repro.launch.train_step import TrainConfig, make_train_step
 from repro.models import lm
 from repro.models.config import ModelConfig, ShapeConfig
+from repro.obs import fingerprint as obs_fp
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.optim import adamw as adamw_mod
 from repro.runtime.failures import run_supervised, SimulatedFailure
+from repro.runtime.stragglers import StragglerMonitor
 
 log = logging.getLogger("repro.train")
 
@@ -67,8 +72,17 @@ def train_loop(model_cfg: ModelConfig, shape: ShapeConfig,
                train_cfg: TrainConfig, mesh, *, steps: int,
                ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
                resume: bool = False, seed: int = 0,
-               fail_at: Optional[int] = None, log_every: int = 10):
-    """Returns (final RunState, list of (step, loss))."""
+               fail_at: Optional[int] = None, log_every: int = 10,
+               fingerprint_path: Optional[str] = None):
+    """Returns the list of (step, loss).
+
+    ``fingerprint_path``: when set, the run's determinism attestation is
+    written there on completion — a chained digest of the per-step
+    (loss, grad_norm) pairs plus bitwise fingerprints of the final params
+    and optimizer state, with the run manifest (DESIGN.md §13.3).  Two runs
+    whose files agree took bit-identical trajectories; the CI
+    determinism-audit lane diffs these files across reruns and mesh widths.
+    """
     dcfg = DataConfig(seed=seed, global_batch=shape.global_batch,
                       seq_len=shape.seq_len, vocab=model_cfg.vocab,
                       embed_dim=(model_cfg.d_model
@@ -128,21 +142,44 @@ def train_loop(model_cfg: ModelConfig, shape: ShapeConfig,
 
     losses = []
     fail_armed = [fail_at]
+    final_state: dict = {}
+    # chained per-step fingerprint: order-sensitive by construction (a
+    # trajectory is a sequence), bitwise-sensitive via the array digests
+    traj = hashlib.sha256(obs_fp.MAGIC + b"trajectory\0")
+    monitor = StragglerMonitor([f"host{jax.process_index()}"])
 
     def one_step(state: RunState, step: int) -> RunState:
         if fail_armed[0] is not None and step == fail_armed[0]:
             fail_armed[0] = None          # fire once, then recover
             raise SimulatedFailure(f"injected failure at step {step}")
-        batch = build_batch(dcfg, model_cfg, step, n_quanta,
-                            train_cfg.mb_size)
-        with compat.set_mesh(mesh):
-            params, opt, metrics = step_fn(state.params, state.opt, batch)
-        loss = float(metrics["loss"])
+        t0 = time.perf_counter()
+        with obs_trace.span("train.step", step=step) as sp:
+            with obs_trace.span("train.build_batch", step=step):
+                batch = build_batch(dcfg, model_cfg, step, n_quanta,
+                                    train_cfg.mb_size)
+            with compat.set_mesh(mesh):
+                params, opt, metrics = step_fn(state.params, state.opt,
+                                               batch)
+            loss_arr = np.asarray(metrics["loss"])
+            gnorm_arr = np.asarray(metrics["grad_norm"])
+            sp.set(loss=float(loss_arr), grad_norm=float(gnorm_arr))
+        dt = time.perf_counter() - t0
+        loss = float(loss_arr)
+        traj.update(np.int64(step).tobytes())
+        traj.update(obs_fp.fingerprint_array(loss_arr, "loss").encode())
+        traj.update(obs_fp.fingerprint_array(gnorm_arr, "gnorm").encode())
+        obs_metrics.histogram("train_step_seconds").observe(dt)
+        obs_metrics.counter("train_steps_total").inc()
+        obs_metrics.gauge("train_loss").set(loss)
+        obs_metrics.gauge("train_grad_norm").set(float(gnorm_arr))
+        monitor.record_step({f"host{jax.process_index()}": dt})
         losses.append((step, loss))
         if step % log_every == 0:
             log.info("step %d loss %.4f gnorm %.3f", step, loss,
-                     float(metrics["grad_norm"]))
-        return RunState(params=params, opt=opt, step=step + 1)
+                     float(gnorm_arr))
+        new_state = RunState(params=params, opt=opt, step=step + 1)
+        final_state["state"] = new_state
+        return new_state
 
     def save(state: RunState, step: int):
         if ckpt_dir:
@@ -154,6 +191,25 @@ def train_loop(model_cfg: ModelConfig, shape: ShapeConfig,
     run_supervised(fresh, restore if resume else lambda: None,
                    one_step, save, total_steps=steps,
                    ckpt_every=ckpt_every)
+    if fingerprint_path and "state" in final_state:
+        st = final_state["state"]
+        fps = {
+            "loss_trajectory": traj.hexdigest(),
+            "params": obs_fp.fingerprint_pytree(
+                jax.tree.map(np.asarray, st.params)),
+            "opt": obs_fp.fingerprint_pytree(
+                jax.tree.map(np.asarray, st.opt)),
+        }
+        obs_fp.write_fingerprints(
+            fingerprint_path, fps,
+            manifest=obs_fp.run_manifest(extra={
+                "steps": len(losses), "grad_mode": train_cfg.grad_mode,
+                "mb_size": train_cfg.mb_size,
+                "mesh": {k: int(v) for k, v in mesh.shape.items()},
+                "seed": seed}))
+        log.info("wrote run fingerprints to %s", fingerprint_path)
+    obs_metrics.dump()
+    obs_trace.flush()
     return losses
 
 
@@ -178,6 +234,9 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--fingerprints", default=None, metavar="PATH",
+                    help="write the run's determinism fingerprints "
+                         "(loss trajectory + final params/opt) to PATH")
     args = ap.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO,
@@ -197,7 +256,8 @@ def main(argv=None):
     losses = train_loop(cfg, shape, tc, mesh, steps=args.steps,
                         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                         resume=args.resume, seed=args.seed,
-                        fail_at=args.fail_at)
+                        fail_at=args.fail_at,
+                        fingerprint_path=args.fingerprints)
     dt = time.time() - t0
     print(f"trained {len(losses)} steps in {dt:.1f}s; "
           f"first loss {losses[0][1]:.4f} -> last {losses[-1][1]:.4f}")

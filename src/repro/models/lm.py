@@ -43,12 +43,14 @@ def param_count(params) -> int:
 
 
 def _embed(params, batch, cfg: ModelConfig,
-           repro_embed: Optional[ReproSpec] = None):
+           repro_embed: Optional[ReproSpec] = None,
+           embed_chunk: int = 4096):
     if cfg.embed_frontend == "stub" and "embeds" in batch:
         x = batch["embeds"].astype(cfg.cdtype)
     else:
         x = common.embed_lookup(params["embed"], batch["tokens"],
-                                repro_embed).astype(cfg.cdtype)
+                                repro_embed,
+                                chunk=embed_chunk).astype(cfg.cdtype)
     if cfg.scale_embed:
         x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
     return x
@@ -66,9 +68,10 @@ def _head_table(params, cfg: ModelConfig):
 
 def forward(params, batch, cfg: ModelConfig, caches=None,
             train: bool = False, remat_policy: str = "nothing",
-            repro_embed: Optional[ReproSpec] = None):
+            repro_embed: Optional[ReproSpec] = None,
+            embed_chunk: int = 4096):
     """Returns (hidden (B,S,D), new_caches, aux_loss)."""
-    x = _embed(params, batch, cfg, repro_embed)
+    x = _embed(params, batch, cfg, repro_embed, embed_chunk)
     B, S = x.shape[:2]
     positions = _positions(batch, cfg, S, B)
     x, caches, aux = transformer.run_stack(
@@ -79,11 +82,18 @@ def forward(params, batch, cfg: ModelConfig, caches=None,
 
 
 def loss_fn(params, batch, cfg: ModelConfig, remat_policy: str = "nothing",
-            repro_embed: Optional[ReproSpec] = None, xent_chunk: int = 512):
-    """batch: tokens/embeds (B, S), targets (B, S) (-1 = masked)."""
+            repro_embed: Optional[ReproSpec] = None, xent_chunk: int = 512,
+            embed_chunk: int = 4096):
+    """batch: tokens/embeds (B, S), targets (B, S) (-1 = masked).
+
+    ``embed_chunk`` is the reproducible embedding-gradient GROUPBY chunk:
+    unlike ``xent_chunk`` (plain float accumulation, order-sensitive) it is
+    bitwise-invariant by the ReproAcc contract, so the determinism audit
+    varies it to attest chunk-invariance *inside* the training loop."""
     hidden, _, aux = forward(params, batch, cfg, train=True,
                              remat_policy=remat_policy,
-                             repro_embed=repro_embed)
+                             repro_embed=repro_embed,
+                             embed_chunk=embed_chunk)
     xent = common.chunked_xent(hidden, _head_table(params, cfg),
                                batch["targets"], cfg, chunk=xent_chunk)
     loss = xent + aux

@@ -1,0 +1,25 @@
+"""repro.obs: the determinism-audit observability layer (DESIGN.md §13).
+
+Three zero-dependency components:
+
+* :mod:`repro.obs.trace`       — nested spans + point events, env-gated via
+  ``REPRO_TRACE``, JSONL sink, no-op fast path when disabled;
+* :mod:`repro.obs.metrics`     — process-local counters/gauges/histograms
+  with JSON dump and Prometheus text exposition (``REPRO_METRICS=0`` turns
+  the recording helpers into no-ops);
+* :mod:`repro.obs.fingerprint` — canonical bitwise sha256 fingerprints of
+  ReproAcc tables, pytrees and result dicts, plus the run manifest that
+  makes fingerprint mismatches diagnosable.
+
+``python -m repro.obs.report`` summarizes a trace/metrics file;
+``python -m repro.obs.audit`` is the CI determinism-audit driver (fresh
+processes, permuted inputs, chunk sizes, mesh widths — diffing fingerprint
+files).
+"""
+from repro.obs import fingerprint, metrics, trace  # noqa: F401
+from repro.obs.fingerprint import (  # noqa: F401
+    fingerprint_array, fingerprint_pytree, fingerprint_results,
+    fingerprint_table, run_manifest,
+)
+from repro.obs.metrics import counter, gauge, histogram  # noqa: F401
+from repro.obs.trace import event, span  # noqa: F401

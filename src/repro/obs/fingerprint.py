@@ -1,0 +1,175 @@
+"""Canonical bitwise fingerprints + the run manifest (DESIGN.md §13.3).
+
+A fingerprint is a sha256 over a *defined byte layout*, so two runs agree on
+the digest iff they agree on every bit of the fingerprinted value.  Because
+the repro engine's tables are bit-identical across methods, chunk sizes, row
+orderings and mesh shapes, their fingerprints are the runtime attestation of
+that invariant: the CI determinism-audit lane compares digest files from
+fresh processes instead of holding both results in memory.
+
+Byte-layout contract (stable across releases; changing it requires bumping
+``LAYOUT_VERSION``, which is hashed into every digest):
+
+  digest = sha256( MAGIC
+                 | kind "\\0"                       (utf-8 tag)
+                 | repeated per array, in a defined order:
+                 |   name "\\0" dtype-name "\\0" ndim shape...   (ascii)
+                 |   raw little-endian C-order bytes )
+
+Arrays are converted to little-endian contiguous layout before hashing (a
+value-preserving byte swap on big-endian hosts), so digests are
+endianness-portable.  Dtype *names* are part of the layout: an int32 table
+and an int64 table never collide, and an x64-vs-x32 mismatch shows up as a
+manifest difference rather than a silent digest change.
+
+The **run manifest** (:func:`run_manifest`) records everything needed to
+diagnose a mismatch that is environmental rather than algorithmic: jax
+version and backend, the x64 flag, the package version, and a digest of the
+measured-calibration cache (plan choices never change bits, but a manifest
+diff that shows only the cache changed immediately rules the planner out).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import platform
+import sys
+
+import numpy as np
+
+__all__ = [
+    "LAYOUT_VERSION", "MAGIC", "fingerprint_array", "fingerprint_table",
+    "fingerprint_pytree", "fingerprint_results", "run_manifest",
+    "write_fingerprints", "read_fingerprints", "diff_fingerprints",
+    "MANIFEST_KEY",
+]
+
+LAYOUT_VERSION = 1
+MAGIC = b"repro-fp/%d\n" % LAYOUT_VERSION
+MANIFEST_KEY = "_manifest"
+
+
+def _le_contiguous(a: np.ndarray) -> np.ndarray:
+    """Value-preserving conversion to little-endian C-order."""
+    a = np.ascontiguousarray(a)
+    if a.dtype.byteorder == ">" or (
+            a.dtype.byteorder == "=" and sys.byteorder == "big"):
+        a = a.astype(a.dtype.newbyteorder("<"))
+    return a
+
+
+def _update_array(h, name: str, arr) -> None:
+    a = _le_contiguous(np.asarray(arr))
+    h.update(name.encode() + b"\0")
+    h.update(a.dtype.name.encode() + b"\0")
+    h.update(np.int64([a.ndim, *a.shape]).astype("<i8").tobytes())
+    h.update(a.tobytes())
+
+
+def _new(kind: str):
+    h = hashlib.sha256()
+    h.update(MAGIC)
+    h.update(kind.encode() + b"\0")
+    return h
+
+
+def fingerprint_array(arr, name: str = "") -> str:
+    """sha256 hex digest of one array under the layout contract."""
+    h = _new("array")
+    _update_array(h, name, arr)
+    return h.hexdigest()
+
+
+def fingerprint_table(acc, spec=None) -> str:
+    """Digest of a ReproAcc table: the (k, C, e1) fields in that order,
+    prefixed with the accumulator format when ``spec`` is given.  Tables
+    that are bit-identical (the engine's invariant across methods, chunks,
+    orderings, meshes) digest identically; one flipped bit changes the
+    digest."""
+    h = _new("reproacc")
+    if spec is not None:
+        h.update(f"{np.dtype(spec.dtype).name}/L{spec.L}/W{spec.W}".encode()
+                 + b"\0")
+    for name, field in (("k", acc.k), ("C", acc.C), ("e1", acc.e1)):
+        _update_array(h, name, field)
+    return h.hexdigest()
+
+
+def _flatten_with_paths(tree):
+    import jax
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in leaves]
+
+
+def fingerprint_pytree(tree) -> str:
+    """Digest of a pytree (params, gradients, optimizer state): every leaf
+    hashed under its tree path, paths in sorted order so the digest is a
+    function of the *mapping*, not the container traversal order."""
+    h = _new("pytree")
+    for path, leaf in sorted(_flatten_with_paths(tree), key=lambda kv: kv[0]):
+        _update_array(h, path, leaf)
+    return h.hexdigest()
+
+
+def fingerprint_results(results: dict) -> str:
+    """Digest of a ``groupby_agg`` result dict (name -> array), keys
+    sorted."""
+    h = _new("results")
+    for name in sorted(results):
+        _update_array(h, name, results[name])
+    return h.hexdigest()
+
+
+def _file_sha256(path: str) -> str | None:
+    try:
+        with open(path, "rb") as fh:
+            return hashlib.sha256(fh.read()).hexdigest()
+    except OSError:
+        return None
+
+
+def run_manifest(extra: dict | None = None) -> dict:
+    """Environment provenance for a fingerprint file."""
+    import jax
+    import repro
+    from repro.ops import calibrate
+    cache = calibrate.cache_path()
+    manifest = {
+        "repro_version": repro.__version__,
+        "fingerprint_layout": LAYOUT_VERSION,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "x64": bool(jax.config.jax_enable_x64),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "calibration_cache": {"path": cache,
+                              "sha256": _file_sha256(cache)},
+    }
+    if extra:
+        manifest.update(extra)
+    return manifest
+
+
+def write_fingerprints(path: str, fingerprints: dict,
+                       manifest: dict | None = None) -> str:
+    """Persist a {name: hexdigest} mapping plus the run manifest."""
+    payload = dict(fingerprints)
+    payload[MANIFEST_KEY] = manifest if manifest is not None \
+        else run_manifest()
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+    return path
+
+
+def read_fingerprints(path: str) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def diff_fingerprints(a: dict, b: dict) -> list[str]:
+    """Names whose digests differ (or exist on one side only).  The manifest
+    entry is excluded — it is diagnostic context, not a determinism claim."""
+    keys = (set(a) | set(b)) - {MANIFEST_KEY}
+    return sorted(k for k in keys if a.get(k) != b.get(k))

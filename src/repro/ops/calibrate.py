@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import json
+import logging
 import os
 import time
 
@@ -37,13 +38,17 @@ import numpy as np
 
 from repro.core.aggregates import segment_table
 from repro.core.types import ReproSpec
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 __all__ = [
     "Calibration", "CACHE_ENV", "AUTOTUNE_ENV", "DEFAULT_CACHE_PATH",
     "cache_path", "spec_key", "load", "save", "measure_point",
     "default_grid", "calibrate", "fitted_cost", "for_planner",
-    "clear_memo",
+    "clear_memo", "env_stamp",
 ]
+
+log = logging.getLogger("repro.calibrate")
 
 CACHE_ENV = "REPRO_CALIBRATION_CACHE"
 AUTOTUNE_ENV = "REPRO_AUTOTUNE"
@@ -58,6 +63,21 @@ _ONEHOT_G_CAP = 1 << 12
 
 def cache_path(path: str | None = None) -> str:
     return path or os.environ.get(CACHE_ENV) or DEFAULT_CACHE_PATH
+
+
+def env_stamp(backend: str | None = None) -> dict:
+    """Provenance stamped into the cache at save time.  A cache calibrated
+    under a different jax version or x64 flag prices strategies for code
+    that no longer runs here — :func:`load` refuses it (with a logged
+    warning event) and the planner falls back to the cold-start model.
+    ``backend`` records the most recent calibration's backend for
+    diagnosability only: points carry their own backend, and the planner
+    already filters on it."""
+    return {
+        "backend": backend or jax.default_backend(),
+        "jax_version": jax.__version__,
+        "x64": bool(jax.config.jax_enable_x64),
+    }
 
 
 def spec_key(spec: ReproSpec) -> str:
@@ -86,7 +106,7 @@ class Calibration:
 def save(cal: Calibration, path: str | None = None) -> str:
     path = cache_path(path)
     payload = {"version": cal.version, "backend": cal.backend,
-               "points": list(cal.points)}
+               "env": env_stamp(cal.backend), "points": list(cal.points)}
     tmp = path + ".tmp"
     with open(tmp, "w") as fh:
         json.dump(payload, fh, indent=1)
@@ -95,7 +115,8 @@ def save(cal: Calibration, path: str | None = None) -> str:
     return path
 
 
-def load(path: str | None = None) -> Calibration | None:
+def load(path: str | None = None,
+         check_env: bool = True) -> Calibration | None:
     path = cache_path(path)
     try:
         with open(path) as fh:
@@ -104,6 +125,22 @@ def load(path: str | None = None) -> Calibration | None:
         return None
     if payload.get("version") != VERSION:
         return None
+    if check_env:
+        stamp = payload.get("env")
+        want = env_stamp(payload.get("backend"))
+        mismatch = ([k for k in ("jax_version", "x64")
+                     if stamp.get(k) != want[k]]
+                    if stamp is not None else ["missing env stamp"])
+        if mismatch:
+            log.warning(
+                "ignoring calibration cache %s: environment mismatch on %s "
+                "(cached %s, running %s) — planner falls back to cold-start "
+                "costs; rerun calibration (REPRO_AUTOTUNE=1) to refresh",
+                path, mismatch, stamp, want)
+            obs_trace.event("calibrate.cache_mismatch", path=path,
+                            mismatch=mismatch, cached=stamp, running=want)
+            obs_metrics.counter("repro_calibration_cache_rejected_total").inc()
+            return None
     backend = payload.get("backend", "unknown")
     points = tuple({"backend": backend, **p}
                    for p in payload.get("points", ()))
@@ -176,16 +213,21 @@ def calibrate(spec: ReproSpec | None = None, methods=None, grid=None,
     grid = list(grid if grid is not None else default_grid(quick))
     key = spec_key(spec)
     points = []
-    for method in methods:
-        for n, g, ncols in grid:
-            if method in ("onehot", "pallas") and g > _ONEHOT_G_CAP:
-                continue
-            if method == "rsum" and g != 1:
-                continue                # the flat kernel only exists at G==1
-            ns = measure(method, n, g, ncols, spec)
-            points.append({"backend": backend, "spec": key, "method": method,
-                           "n": n, "G": g, "ncols": ncols,
-                           "ns_per_row": float(ns)})
+    with obs_trace.span("calibrate", backend=backend, spec=key,
+                        methods=list(methods), grid_points=len(grid)):
+        for method in methods:
+            for n, g, ncols in grid:
+                if method in ("onehot", "pallas") and g > _ONEHOT_G_CAP:
+                    continue
+                if method == "rsum" and g != 1:
+                    continue            # the flat kernel only exists at G==1
+                with obs_trace.span("calibrate.measure", method=method,
+                                    n=n, G=g, ncols=ncols):
+                    ns = measure(method, n, g, ncols, spec)
+                points.append({"backend": backend, "spec": key,
+                               "method": method, "n": n, "G": g,
+                               "ncols": ncols, "ns_per_row": float(ns)})
+    obs_metrics.counter("repro_calibration_points_total").inc(len(points))
     prior = load(path)
     if prior is not None:
         # merge: replace same-key points, keep everything else — including

@@ -28,6 +28,8 @@ from repro.core import accumulator as acc_mod
 from repro.core import aggregates
 from repro.core import prescan
 from repro.core.types import ReproSpec
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.ops.plan import plan_groupby
 
 __all__ = ["groupby_agg", "agg_name", "AGG_KINDS"]
@@ -195,6 +197,24 @@ def _finalize_plans(names, plans, sums, mins, maxs, spec: ReproSpec):
     return out
 
 
+def _emit_prescan_stats(n, ncols, spec: ReproSpec, lv, chunk_skip, plan):
+    """Record what the batch-adaptive prescan proved: L vs L_eff per run,
+    chunk count, and whether the per-chunk top-skip engaged (DESIGN.md §13.4).
+    No-op when observability is disabled."""
+    l_eff = prescan.window_length(lv, spec)
+    chunks = -(-int(n) // plan.chunk) if plan.chunk else 0
+    obs_trace.event("groupby.prescan_stats", n=int(n), ncols=int(ncols),
+                    L=spec.L, L_eff=l_eff,
+                    levels=list(lv) if lv is not None else None,
+                    chunk_skip=bool(chunk_skip), chunk=plan.chunk,
+                    chunks=chunks)
+    obs_metrics.counter("repro_groupby_rows_total").inc(int(n))
+    obs_metrics.counter("repro_groupby_calls_total",
+                        method=plan.method).inc()
+    obs_metrics.counter("repro_groupby_levels_pruned_total").inc(
+        spec.L - l_eff)
+
+
 def groupby_agg(values, keys, num_segments: int, aggs=("sum",),
                 spec: ReproSpec | None = None, method: str = "auto",
                 chunk: int | None = None, return_table: bool = False,
@@ -243,23 +263,35 @@ def groupby_agg(values, keys, num_segments: int, aggs=("sum",),
 
     table = None
     if ncols:
-        e1 = acc_mod.required_e1(X, spec, axis=0)            # per-column
-        lv, chunk_skip = _resolve_levels(levels, X, e1, spec)
+        with obs_trace.span("groupby.prescan", n=int(X.shape[0]),
+                            ncols=ncols) as sp:
+            e1 = acc_mod.required_e1(X, spec, axis=0)        # per-column
+            lv, chunk_skip = _resolve_levels(levels, X, e1, spec)
+            sp.set(levels=list(lv) if lv is not None else None,
+                   chunk_skip=bool(chunk_skip))
         plan = plan_groupby(int(X.shape[0]), num_segments, spec, ncols=ncols,
                             method=method, chunk=chunk, levels=lv)
-        table = aggregates.segment_table(
-            X, keys, num_segments, spec, method=plan.method, e1=e1,
-            chunk=plan.chunk, levels=lv, chunk_skip=chunk_skip,
-            num_buckets=plan.buckets if plan.method in ("sort", "radix")
-            else None)
-        sums = acc_mod.finalize(table, spec)                 # (G, ncols)
+        _emit_prescan_stats(X.shape[0], ncols, spec, lv, chunk_skip, plan)
+        with obs_trace.span("groupby.aggregate", method=plan.method,
+                            chunk=plan.chunk, buckets=plan.buckets,
+                            n=int(X.shape[0]), G=int(num_segments)):
+            table = aggregates.segment_table(
+                X, keys, num_segments, spec, method=plan.method, e1=e1,
+                chunk=plan.chunk, levels=lv, chunk_skip=chunk_skip,
+                num_buckets=plan.buckets if plan.method in ("sort", "radix")
+                else None)
+        with obs_trace.span("groupby.finalize"):
+            sums = acc_mod.finalize(table, spec)             # (G, ncols)
     else:
         sums = jnp.zeros((num_segments, 0), spec.dtype)
 
     mins, maxs = {}, {}
-    for j in _minmax_cols(plans):
-        mins[j] = jax.ops.segment_min(v[:, j], keys, num_segments)
-        maxs[j] = jax.ops.segment_max(v[:, j], keys, num_segments)
+    mm = _minmax_cols(plans)
+    if mm:
+        with obs_trace.span("groupby.minmax", ncols=len(mm)):
+            for j in mm:
+                mins[j] = jax.ops.segment_min(v[:, j], keys, num_segments)
+                maxs[j] = jax.ops.segment_max(v[:, j], keys, num_segments)
 
     out = _finalize_plans(names, plans, sums, mins, maxs, spec)
     if return_table:

@@ -46,6 +46,8 @@ from repro.core.aggregates import (  # noqa: F401  (re-exports)
     radix_buckets, scatter_chunk_bound, table_bytes)
 from repro.core.prescan import window_length
 from repro.core.types import ReproSpec
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 __all__ = [
     "GroupbyPlan", "plan_groupby", "pick_chunk", "default_chunk",
@@ -108,6 +110,26 @@ def pick_chunk(method: str, num_segments: int, ncols: int, spec: ReproSpec,
     return int(min(bound, 1 << (int(free // row_bytes).bit_length() - 1)))
 
 
+def _emit_plan(plan: "GroupbyPlan", n: int, num_segments: int, ncols: int,
+               backend: str, levels) -> "GroupbyPlan":
+    """Plan-decision observability: one event + one counter per decision.
+
+    The event carries everything needed to audit the decision after the
+    fact — strategy, buffer sizes, cost source (measured vs modeled vs
+    explicit) and the one-line rationale (DESIGN.md §13.4).  No-op unless
+    tracing/metrics are enabled.
+    """
+    obs_metrics.counter("repro_plan_total", method=plan.method,
+                        source=plan.source).inc()
+    obs_trace.event("plan.groupby", method=plan.method, chunk=plan.chunk,
+                    buckets=plan.buckets, source=plan.source,
+                    cost_per_row=plan.cost, n=int(n), G=int(num_segments),
+                    ncols=int(ncols), backend=backend,
+                    levels=list(levels) if levels is not None else None,
+                    reason=plan.reason)
+    return plan
+
+
 @dataclasses.dataclass(frozen=True)
 class GroupbyPlan:
     """An executable dispatch decision: strategy + buffer sizes + rationale."""
@@ -148,9 +170,11 @@ def plan_groupby(n: int, num_segments: int, spec: ReproSpec, ncols: int = 1,
         c = _clamp_chunk(
             method, chunk or pick_chunk(method, num_segments, ncols, spec,
                                         levels), spec)
-        return GroupbyPlan(method, c, 0.0, "explicit request",
-                           buckets=buckets if method in ("sort", "radix")
-                           else 1, source="explicit")
+        return _emit_plan(
+            GroupbyPlan(method, c, 0.0, "explicit request",
+                        buckets=buckets if method in ("sort", "radix")
+                        else 1, source="explicit"),
+            n, num_segments, ncols, backend, levels)
 
     cal = None
     if calibration is not None:
@@ -218,6 +242,8 @@ def plan_groupby(n: int, num_segments: int, spec: ReproSpec, ncols: int = 1,
               + f", {backend})")
     c = _clamp_chunk(best, chunk or pick_chunk(best, num_segments, ncols,
                                                spec, levels), spec)
-    return GroupbyPlan(best, c, costs[best], reason,
-                       buckets=buckets if best in ("sort", "radix") else 1,
-                       source=source)
+    return _emit_plan(
+        GroupbyPlan(best, c, costs[best], reason,
+                    buckets=buckets if best in ("sort", "radix") else 1,
+                    source=source),
+        n, num_segments, ncols, backend, levels)

@@ -19,6 +19,9 @@ import dataclasses
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 
 @dataclasses.dataclass
 class StragglerConfig:
@@ -62,6 +65,21 @@ class StragglerMonitor:
                     actions[h] = "evict"
                 else:
                     actions[h] = "rebalance"
+        # publish the monitor's internal state: per-host EWMA gauges, the
+        # fleet median, and one counter per mitigation decision, so a
+        # dashboard can watch straggling develop instead of learning about
+        # it from an eviction log line (DESIGN.md §13.4)
+        for h, st in self.stats.items():
+            if st.ewma is not None:
+                obs_metrics.gauge("straggler_step_ewma_seconds",
+                                  host=h).set(st.ewma)
+        if med is not None:
+            obs_metrics.gauge("straggler_fleet_median_seconds").set(med)
+        for h, action in actions.items():
+            obs_metrics.counter("straggler_actions_total",
+                                action=action).inc()
+            obs_trace.event("straggler.action", host=h, action=action,
+                            ewma=self.stats[h].ewma, median=med)
         return actions
 
     @staticmethod
