@@ -115,6 +115,48 @@ def checkpoint_fingerprint(directory: str,
             "tree_fingerprint": manifest.get("tree_fingerprint")}
 
 
+def read_manifest(directory: str, step: Optional[int] = None) -> dict:
+    """The full manifest of a checkpoint (latest step by default), without
+    loading its arrays.  Restore-side callers use it to rebuild skeletons
+    from ``extra`` (e.g. a stream store's :class:`AggSignature`) before any
+    array is touched."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def verify_value(tree, directory: str, step: Optional[int] = None) -> str:
+    """Value-identity check: recompute the byte-layout fingerprint of a
+    live (restored) pytree and compare it against the checkpoint manifest's
+    ``tree_fingerprint``.
+
+    Where the npz ``sha256`` guards storage integrity, this guards the
+    *restore path itself* — device placement, dtype round-trips, skeleton
+    mismatches.  A stream store restarting from a snapshot calls this to
+    prove the restart is bit-exact before accepting new batches.  Returns
+    the matching fingerprint; raises ``IOError`` on mismatch and
+    ``ValueError`` for pre-obs checkpoints that never stored one."""
+    manifest = read_manifest(directory, step)
+    want = manifest.get("tree_fingerprint")
+    if want is None:
+        raise ValueError(
+            f"checkpoint step {manifest['step']} in {directory} predates "
+            "tree fingerprints; cannot verify value identity")
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    got = obs_fp.fingerprint_pytree(flat)
+    if got != want:
+        raise IOError(
+            f"restored tree does not match checkpoint step "
+            f"{manifest['step']}: fingerprint {got} != manifest {want}")
+    obs_trace.event("ckpt.value_verified", step=manifest["step"],
+                    fingerprint=got)
+    return got
+
+
 def _gc(directory: str, keep: int):
     steps = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
     for d in steps[:-keep] if keep else []:

@@ -35,8 +35,8 @@ from repro.core.types import ReproSpec
 
 __all__ = [
     "ReproAcc", "zeros", "extract", "pad_levels", "renorm", "from_values",
-    "add_values", "merge", "finalize", "demote_to", "to_paper_state",
-    "from_paper_state", "required_e1",
+    "add_values", "merge", "merge_all", "finalize", "demote_to",
+    "to_paper_state", "from_paper_state", "required_e1",
 ]
 
 
@@ -140,8 +140,10 @@ def _tree_sum(k, C, spec: ReproSpec, axis: int):
         if pad:
             k = jnp.concatenate([k, jnp.zeros((pad, *k.shape[1:]), k.dtype)], 0)
             C = jnp.concatenate([C, jnp.zeros((pad, *C.shape[1:]), C.dtype)], 0)
-        k = k.reshape(-1, g, *k.shape[1:]).sum(axis=1)   # exact: g * 2^(m-2) fits
-        C = C.reshape(-1, g, *C.shape[1:]).sum(axis=1)
+        # exact: g * 2^(m-2) fits; pin dtype — under x64 jnp.sum would
+        # promote to int64 and change the table's byte layout
+        k = k.reshape(-1, g, *k.shape[1:]).sum(axis=1, dtype=k.dtype)
+        C = C.reshape(-1, g, *C.shape[1:]).sum(axis=1, dtype=C.dtype)
         k, C = renorm(k, C, spec)
     # single-element inputs skip the loop: renorm unconditionally so the
     # canonical window invariant holds for every return path
@@ -211,6 +213,32 @@ def merge(a: ReproAcc, b: ReproAcc, spec: ReproSpec) -> ReproAcc:
     a = demote_to(a, e1, spec)
     b = demote_to(b, e1, spec)
     k, C = renorm(a.k + b.k, a.C + b.C, spec)
+    return ReproAcc(k=k, C=C, e1=e1)
+
+
+def merge_all(accs, spec: ReproSpec) -> ReproAcc:
+    """Exact k-way merge of same-shape accumulators.
+
+    One demotion onto the elementwise-max lattice, then one integer tree
+    reduction (:func:`_tree_sum`, renorm between rounds so nothing
+    overflows).  Because the canonical decomposition is unique and integer
+    addition is associative, the result is bit-identical to *any* pairwise
+    :func:`merge` fold over the same accumulators — the k-way form just
+    does one demote per operand instead of one per fold step.  Sliding
+    window queries (rings of mergeable partials) are the intended caller.
+    """
+    accs = list(accs)
+    if not accs:
+        raise ValueError("merge_all needs at least one accumulator")
+    if len(accs) == 1:
+        return accs[0]
+    e1 = accs[0].e1
+    for a in accs[1:]:
+        e1 = jnp.maximum(e1, a.e1)
+    demoted = [demote_to(a, e1, spec) for a in accs]
+    k = jnp.stack([a.k for a in demoted], axis=0)
+    C = jnp.stack([a.C for a in demoted], axis=0)
+    k, C = _tree_sum(k, C, spec, axis=0)
     return ReproAcc(k=k, C=C, e1=e1)
 
 

@@ -12,6 +12,14 @@ fingerprints as the only channel of comparison:
   explicit strategies overriding the planner.  Every variant runs in its
   own process (fresh XLA compilation cache, fresh RNG state) and writes
   ``fp_groupby_<tag>.json``.
+* **Stream family** — the same adversarial rows delivered as 1, 7 and 64
+  micro-batches (the 64-batch variant in permuted order) into a
+  :class:`repro.stream.StreamStore`, plus a variant that snapshots after
+  three batches, restores into a fresh store (restore re-verifies the
+  state bytes against the manifest fingerprint) and streams the rest.
+  Every variant must fingerprint identically to a one-shot
+  ``groupby_agg`` over the concatenated rows — micro-batch count, ingest
+  order and restarts are all invisible in the bits.
 * **Train family** — a short training run fingerprinted end-to-end
   (chained per-step loss/grad-norm digests + final params/opt), repeated
   in fresh processes, across data-parallel mesh widths
@@ -54,6 +62,17 @@ GROUPBY_VARIANTS = [
     ("chunk8192", {"chunk": 8192}),      # summation-buffer size must not
     ("radix", {"method": "radix"}),      # planner choice must not
     ("onehot", {"method": "onehot"}),
+]
+
+# (tag, {overrides}) — ``batches=0`` is the one-shot groupby_agg reference;
+# every streamed variant must fingerprint identically to it.
+STREAM_VARIANTS = [
+    ("oneshot", {"batches": 0}),
+    ("batches1", {"batches": 1}),
+    ("batches7", {"batches": 7}),
+    ("batches64perm", {"batches": 64, "permute_batches": True}),
+    ("restart", {"batches": 7, "permute_batches": True,
+                 "restart_after": 3}),
 ]
 
 TRAIN_STEPS = 2
@@ -115,6 +134,55 @@ def _worker_groupby(args) -> int:
             "tag": args.tag, "n": args.n, "G": GROUPBY_G,
             "method": args.method, "chunk": args.chunk,
             "permuted": bool(args.permute)}))
+    obs_metrics.dump()
+    obs_trace.flush()
+    return 0
+
+
+def _worker_stream(args) -> int:
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.types import ReproSpec
+    from repro.obs import fingerprint as obs_fp
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+    from repro.ops.groupby import groupby_agg
+    from repro.stream import StreamStore
+
+    values, keys = _groupby_dataset(args.n, args.permute)
+    spec = ReproSpec(dtype=jnp.float32, L=GROUPBY_L)
+    aggs = ("sum", "count", "mean", "var", "min", "max", ("sum", 1))
+    if args.batches == 0:
+        # one-shot reference: no stream machinery on this path at all
+        results, table = groupby_agg(values, keys, GROUPBY_G, aggs=aggs,
+                                     spec=spec, return_table=True)
+        fps = {"stream/table": obs_fp.fingerprint_table(table),
+               "stream/results": obs_fp.fingerprint_results(results)}
+    else:
+        order = list(range(args.batches))
+        if args.permute_batches:
+            order = np.random.default_rng(
+                GROUPBY_SEED + 2).permutation(args.batches).tolist()
+        idx = np.array_split(np.arange(values.shape[0]), args.batches)
+        store = StreamStore(GROUPBY_G, aggs=aggs, spec=spec)
+        ckdir = os.path.join(args.out, f"ckpt_stream_{args.tag}")
+        for pos, b in enumerate(order):
+            store.ingest(values[idx[b]], keys[idx[b]])
+            if args.restart_after and pos + 1 == args.restart_after:
+                store.snapshot(ckdir)
+                # a fresh store from the snapshot — restore verifies the
+                # state bytes against the manifest fingerprint, then the
+                # remaining deltas continue as if nothing happened
+                store = StreamStore.restore(ckdir)
+        store.query()
+        fps = store.fingerprints()
+    obs_fp.write_fingerprints(
+        os.path.join(args.out, f"fp_stream_{args.tag}.json"), fps,
+        manifest=obs_fp.run_manifest(extra={
+            "tag": args.tag, "n": args.n, "G": GROUPBY_G,
+            "batches": args.batches,
+            "permute_batches": bool(args.permute_batches),
+            "restart_after": args.restart_after}))
     obs_metrics.dump()
     obs_trace.flush()
     return 0
@@ -217,7 +285,7 @@ def _audit(args) -> int:
     os.makedirs(args.out, exist_ok=True)
     n = 4001 if args.quick else 20001
     t0 = time.time()
-    summary = {"groupby": None, "train": None}
+    summary = {"groupby": None, "stream": None, "train": None}
     failures = []
 
     if not args.skip_groupby:
@@ -240,6 +308,27 @@ def _audit(args) -> int:
             summary["groupby"] = "mismatch" if mism else "identical"
             if mism:
                 failures.append(f"groupby fingerprints diverged: {mism}")
+
+    if not args.skip_stream:
+        jobs = []
+        for tag, ov in STREAM_VARIANTS:
+            extra = ["--n", str(n), "--batches", str(ov.get("batches", 0))]
+            if ov.get("permute_batches"):
+                extra += ["--permute-batches"]
+            if ov.get("restart_after"):
+                extra += ["--restart-after", str(ov["restart_after"])]
+            jobs.append((tag, (lambda t=tag, e=extra:
+                               _spawn("stream", args.out, t, e))))
+        failed = _run_family("stream", jobs, serial=args.serial)
+        if failed:
+            failures.append(f"stream workers failed: {failed}")
+            summary["stream"] = "worker_failure"
+        else:
+            mism = _diff_family("stream", args.out,
+                                [t for t, _ in STREAM_VARIANTS])
+            summary["stream"] = "mismatch" if mism else "identical"
+            if mism:
+                failures.append(f"stream fingerprints diverged: {mism}")
 
     if not args.skip_train:
         jobs = []
@@ -267,7 +356,8 @@ def _audit(args) -> int:
         json.dump(summary, fh, indent=1)
     print(f"determinism audit: {summary['status'].upper()} "
           f"in {summary['elapsed_s']}s "
-          f"(groupby={summary['groupby']}, train={summary['train']})")
+          f"(groupby={summary['groupby']}, stream={summary['stream']}, "
+          f"train={summary['train']})")
     if failures:
         for f in failures:
             print(f"  {f}")
@@ -282,21 +372,30 @@ def main(argv=None) -> int:
                     help="smaller GROUPBY workload")
     ap.add_argument("--skip-train", action="store_true")
     ap.add_argument("--skip-groupby", action="store_true")
+    ap.add_argument("--skip-stream", action="store_true")
     ap.add_argument("--serial", action="store_true",
                     help="run GROUPBY workers one at a time")
     # worker mode (internal)
-    ap.add_argument("--worker", choices=["groupby", "train"])
+    ap.add_argument("--worker", choices=["groupby", "stream", "train"])
     ap.add_argument("--tag", default="base")
     ap.add_argument("--n", type=int, default=20001)
     ap.add_argument("--method", default="auto")
     ap.add_argument("--chunk", type=int, default=None)
     ap.add_argument("--permute", action="store_true")
+    ap.add_argument("--batches", type=int, default=0,
+                    help="stream worker: micro-batch count (0 = one-shot)")
+    ap.add_argument("--permute-batches", action="store_true")
+    ap.add_argument("--restart-after", type=int, default=0,
+                    help="stream worker: snapshot+restore after this many "
+                         "ingested batches")
     ap.add_argument("--steps", type=int, default=TRAIN_STEPS)
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--embed-chunk", type=int, default=4096)
     args = ap.parse_args(argv)
     if args.worker == "groupby":
         return _worker_groupby(args)
+    if args.worker == "stream":
+        return _worker_stream(args)
     if args.worker == "train":
         return _worker_train(args)
     return _audit(args)

@@ -2,9 +2,13 @@
 
 The layering (DESIGN.md §10):
 
+* :mod:`repro.ops.partial` — the partial/merge/finalize pipeline
+  (DESIGN.md §14): ``partial_agg`` produces a mergeable ``PartialState``,
+  ``merge`` combines partials bit-associatively, ``finalize`` extracts the
+  result dict;
 * :mod:`repro.ops.groupby` — ``groupby_agg``, the unified multi-aggregate
   GROUPBY entry point (SUM/COUNT/MEAN/VAR/STD/SUM(x*y)/MIN/MAX, one fused
-  pass);
+  pass) — now ``finalize(partial_agg(...))``;
 * :mod:`repro.ops.plan` — the cost-model planner dispatching between the
   jnp strategies and the Pallas kernel (buffer-residency chunk and radix
   fan-out included);
@@ -14,9 +18,14 @@ The layering (DESIGN.md §10):
   GROUPBY, bit-identical across mesh shapes.
 """
 from repro.ops.groupby import groupby_agg, agg_name, AGG_KINDS  # noqa: F401
+from repro.ops.partial import (  # noqa: F401
+    AggSignature, PartialState, empty_partial, finalize, merge, merge_all,
+    partial_agg,
+)
 from repro.ops.plan import (  # noqa: F401
-    GroupbyPlan, plan_groupby, pick_chunk, default_chunk, onehot_block_bound,
-    scatter_chunk_bound, pad_and_chunk, table_bytes, radix_buckets, METHODS,
+    GroupbyPlan, PartialPlan, plan_groupby, plan_partial, pick_chunk,
+    default_chunk, onehot_block_bound, scatter_chunk_bound, pad_and_chunk,
+    table_bytes, radix_buckets, METHODS,
 )
 from repro.ops import calibrate  # noqa: F401
-from repro.ops.sharded import sharded_groupby_agg  # noqa: F401
+from repro.ops.sharded import sharded_groupby_agg, sharded_partial_agg  # noqa: F401

@@ -5,220 +5,45 @@ value matrix and a key column, it computes any mix of SUM / COUNT / MEAN /
 VAR / STD / SUM(x*y) / MIN / MAX in **one** fused pass, bit-identically
 across execution methods, row orderings, chunk sizes and device shardings.
 
+Since the partial/merge/finalize refactor (DESIGN.md §14) this module is a
+thin composition over :mod:`repro.ops.partial`:
+
+    groupby_agg(rows) == finalize(partial_agg(rows))
+
+The one-shot path simply never calls ``merge`` — but because
+``merge(partial(A), partial(B)) == partial(A ++ B)`` bit for bit, the same
+three stages power the sharded operator (per-shard partials + collective
+merge) and the streaming engine (:mod:`repro.stream`: a persistent state
+plus one merge per micro-batch), all provably equal to this function.
+
 How the family reduces to the paper's SUM (DESIGN.md §10): the requested
 aggregates compile to a deduplicated list of *accumulator columns* — raw
 columns, elementwise squares/products, and a ones column — which aggregate
 as a stacked matrix into one accumulator table ``(G, ncols, L)``.  Every
 derived aggregate (MEAN, VAR, STD) is then a fixed elementwise function of
 the finalized sums; since the sums are bit-reproducible and the finalizer is
-a pure function, the derived results are too (the argument the paper makes
-for HAVING/ORDER-BY stability, extended to Kamat & Nandi's one-pass
-VAR/STD).  MIN/MAX need no accumulator at all: float min/max is associative,
-so ``segment_min``/``segment_max`` are exact and order-independent as-is.
-
-Column squares and products are rounded once per element (IEEE multiply) —
-deterministic and order-independent, so fusing them costs no reproducibility.
+a pure function, the derived results are too.  MIN/MAX need no accumulator
+at all: float min/max is associative, so ``segment_min``/``segment_max``
+are exact and order-independent as-is.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import accumulator as acc_mod
-from repro.core import aggregates
-from repro.core import prescan
 from repro.core.types import ReproSpec
-from repro.obs import metrics as obs_metrics
-from repro.obs import trace as obs_trace
-from repro.ops.plan import plan_groupby
+# Compilation/finalization helpers live in repro.ops.partial now; re-exported
+# here because sharded.py and external callers historically import them from
+# this module.
+from repro.ops.partial import (  # noqa: F401
+    AGG_KINDS, AggSignature, PartialState, _as_matrix, _build_columns,
+    _compile, _finalize_plans, _minmax_cols, _normalize, agg_name, finalize,
+    partial_agg)
 
 __all__ = ["groupby_agg", "agg_name", "AGG_KINDS"]
-
-AGG_KINDS = ("sum", "count", "mean", "var", "std", "min", "max", "sum_prod")
-
-
-def _normalize(aggs):
-    """Accept 'sum' / ('sum', col) / ('sum_prod', i, j) forms -> tuples."""
-    norm = []
-    for a in aggs:
-        if isinstance(a, str):
-            a = (a,) if a in ("count",) else (a, 0)
-        a = tuple(a)
-        kind = a[0]
-        if kind == "avg":
-            kind, a = "mean", ("mean", *a[1:])
-        if kind == "count":
-            a = ("count",)
-        elif kind == "sum_prod":
-            if len(a) != 3:
-                raise ValueError(f"sum_prod takes two columns, got {a!r}")
-        elif len(a) != 2:
-            raise ValueError(f"aggregate {a!r} takes exactly one column")
-        if kind not in AGG_KINDS:
-            raise ValueError(f"unknown aggregate {kind!r}; want {AGG_KINDS}")
-        norm.append(a)
-    return norm
-
-
-def agg_name(a) -> str:
-    """Canonical result key: 'sum(0)', 'count(*)', 'sum_prod(0,1)', ..."""
-    a = _normalize([a])[0]
-    if a[0] == "count":
-        return "count(*)"
-    return f"{a[0]}({','.join(str(c) for c in a[1:])})"
-
-
-def _compile(aggs):
-    """Compile aggregates to (names, accumulator columns, finalize plans).
-
-    Columns are deduplicated: ``[("mean", 0), ("var", 0)]`` shares the raw
-    column and the ones column, adding only the squares column.
-    """
-    norm = _normalize(aggs)
-    cols, index = [], {}
-
-    def need(c):
-        if c not in index:
-            index[c] = len(cols)
-            cols.append(c)
-        return index[c]
-
-    plans = []
-    for a in norm:
-        kind = a[0]
-        if kind == "sum":
-            plans.append(("sum", need(("col", a[1]))))
-        elif kind == "sum_prod":
-            plans.append(("sum", need(("prod", a[1], a[2]))))
-        elif kind == "count":
-            plans.append(("count", need(("ones",))))
-        elif kind == "mean":
-            plans.append(("mean", need(("col", a[1])), need(("ones",))))
-        elif kind in ("var", "std"):
-            plans.append((kind, need(("col", a[1])), need(("sq", a[1])),
-                          need(("ones",))))
-        else:  # min / max: exact as-is, no accumulator column
-            plans.append((kind, a[1]))
-    return [agg_name(a) for a in norm], cols, plans
-
-
-def _as_matrix(values, spec: ReproSpec):
-    v = jnp.asarray(values, spec.dtype)
-    if v.ndim == 1:
-        v = v[:, None]
-    if v.ndim != 2:
-        raise ValueError(f"groupby_agg expects values (n,) or (n, C), "
-                         f"got shape {v.shape}")
-    return v
-
-
-def _build_columns(v, cols, spec: ReproSpec):
-    """Materialize the stacked accumulator-column matrix (n, ncols)."""
-    parts = []
-    for c in cols:
-        if c[0] == "col":
-            parts.append(v[:, c[1]])
-        elif c[0] == "sq":
-            parts.append(v[:, c[1]] * v[:, c[1]])
-        elif c[0] == "prod":
-            parts.append(v[:, c[1]] * v[:, c[2]])
-        else:  # ("ones",)
-            parts.append(jnp.ones(v.shape[0], spec.dtype))
-    if not parts:
-        return jnp.zeros((v.shape[0], 0), spec.dtype)
-    return jnp.stack(parts, axis=1)
-
-
-def _minmax_cols(plans):
-    return sorted({p[1] for p in plans if p[0] in ("min", "max")})
-
-
-def _resolve_levels(levels, X, e1, spec: ReproSpec):
-    """Turn the ``levels`` request into (static window | None, chunk_skip).
-
-    ``"auto"`` + concrete inputs = the prescan pass: one vectorized stream
-    over the rows yields per-chunk, per-column exponent stats; the union of
-    the live windows becomes the static window, and per-chunk top-skipping
-    is enabled only when some chunk can prune *more* than the union (i.e.
-    the data is magnitude-heterogeneous) — homogeneous inputs skip the
-    per-chunk switch entirely so the hot loop stays branchless.
-    """
-    if levels is None:
-        return None, False
-    if levels != "auto":
-        return prescan.check_levels(levels, spec), False
-    if not (prescan.is_concrete(X) and prescan.is_concrete(e1)):
-        return None, False                      # traced: full window
-    if X.shape[0] == 0:
-        return (0, 1), False                    # empty input: all-zero table
-    probe = aggregates.default_chunk("scatter", spec)
-    stats = prescan.chunk_stats(
-        aggregates.pad_and_chunk(X, probe), spec)            # (nblk, ncols)
-    lo_a, hi_a = prescan.level_window(stats, e1[None, :], spec)
-    lo, hi = int(jnp.min(lo_a)), int(jnp.max(hi_a))
-    if lo >= hi:
-        lo, hi = 0, 1                            # degenerate: all-zero input
-    # heterogeneous when some chunk's own window starts above the union's
-    # lo, i.e. that chunk can skip more top levels than the static window
-    chunk_skip = hi - lo > 1 and bool(
-        jnp.max(jnp.min(lo_a.reshape(lo_a.shape[0], -1), axis=1)) > lo)
-    return (lo, hi), chunk_skip
-
-
-def _finalize_plans(names, plans, sums, mins, maxs, spec: ReproSpec):
-    """Derive every requested aggregate from the finalized table.
-
-    Fixed elementwise formulas — pure functions of reproducible inputs, so
-    the outputs inherit bit-reproducibility.  Empty groups yield NaN for
-    MEAN/VAR/STD (the reduction identity for MIN/MAX, 0 for SUM/COUNT).
-    """
-    nan = jnp.asarray(jnp.nan, spec.dtype)
-    out = {}
-    for name, p in zip(names, plans):
-        kind = p[0]
-        if kind in ("sum", "count"):
-            r = sums[:, p[1]]
-        elif kind == "mean":
-            s, cnt = sums[:, p[1]], sums[:, p[2]]
-            r = jnp.where(cnt > 0, s / jnp.where(cnt > 0, cnt, 1), nan)
-        elif kind in ("var", "std"):
-            s, s2, cnt = sums[:, p[1]], sums[:, p[2]], sums[:, p[3]]
-            safe = jnp.where(cnt > 0, cnt, 1)
-            mean = s / safe
-            r = jnp.maximum(s2 / safe - mean * mean, 0.0)  # population var
-            if kind == "std":
-                r = jnp.sqrt(r)
-            r = jnp.where(cnt > 0, r, nan)
-        elif kind == "min":
-            r = mins[p[1]]
-        else:
-            r = maxs[p[1]]
-        out[name] = r
-    return out
-
-
-def _emit_prescan_stats(n, ncols, spec: ReproSpec, lv, chunk_skip, plan):
-    """Record what the batch-adaptive prescan proved: L vs L_eff per run,
-    chunk count, and whether the per-chunk top-skip engaged (DESIGN.md §13.4).
-    No-op when observability is disabled."""
-    l_eff = prescan.window_length(lv, spec)
-    chunks = -(-int(n) // plan.chunk) if plan.chunk else 0
-    obs_trace.event("groupby.prescan_stats", n=int(n), ncols=int(ncols),
-                    L=spec.L, L_eff=l_eff,
-                    levels=list(lv) if lv is not None else None,
-                    chunk_skip=bool(chunk_skip), chunk=plan.chunk,
-                    chunks=chunks)
-    obs_metrics.counter("repro_groupby_rows_total").inc(int(n))
-    obs_metrics.counter("repro_groupby_calls_total",
-                        method=plan.method).inc()
-    obs_metrics.counter("repro_groupby_levels_pruned_total").inc(
-        spec.L - l_eff)
 
 
 def groupby_agg(values, keys, num_segments: int, aggs=("sum",),
                 spec: ReproSpec | None = None, method: str = "auto",
                 chunk: int | None = None, return_table: bool = False,
-                levels="auto"):
+                levels="auto", check_finite: bool = False):
     """Bit-reproducible multi-aggregate GROUPBY.
 
     Args:
@@ -246,56 +71,21 @@ def groupby_agg(values, keys, num_segments: int, aggs=("sum",),
                     window.  ``None`` forces full; an explicit ``(lo, hi)``
                     tuple is used as given (caller-proved, e.g. from a
                     global prescan over shards).
+      check_finite: opt-in §13.6 contract check — raise
+                    ``FloatingPointError`` on ±inf/NaN inputs and on
+                    derived columns (squares/products) that overflow to
+                    non-finite values, instead of silently leaving the
+                    reproducibility contract.  Needs concrete inputs.
 
     Returns an ordered dict mapping canonical names (see :func:`agg_name`)
     to finalized (G,) arrays; with ``return_table=True``, a
     ``(results, table)`` pair.  Every output is bit-identical across
     methods, row orderings, chunk sizes, level windows and shardings.
     """
-    spec = spec or ReproSpec()
-    v = _as_matrix(values, spec)
-    keys = jnp.asarray(keys, jnp.int32).reshape(-1)
-    if v.shape[0] != keys.shape[0]:
-        raise ValueError("values and keys disagree on the row count")
-    names, cols, plans = _compile(aggs)
-    X = _build_columns(v, cols, spec)
-    ncols = X.shape[1]
-
-    table = None
-    if ncols:
-        with obs_trace.span("groupby.prescan", n=int(X.shape[0]),
-                            ncols=ncols) as sp:
-            e1 = acc_mod.required_e1(X, spec, axis=0)        # per-column
-            lv, chunk_skip = _resolve_levels(levels, X, e1, spec)
-            sp.set(levels=list(lv) if lv is not None else None,
-                   chunk_skip=bool(chunk_skip))
-        plan = plan_groupby(int(X.shape[0]), num_segments, spec, ncols=ncols,
-                            method=method, chunk=chunk, levels=lv)
-        _emit_prescan_stats(X.shape[0], ncols, spec, lv, chunk_skip, plan)
-        with obs_trace.span("groupby.aggregate", method=plan.method,
-                            chunk=plan.chunk, buckets=plan.buckets,
-                            n=int(X.shape[0]), G=int(num_segments)):
-            table = aggregates.segment_table(
-                X, keys, num_segments, spec, method=plan.method, e1=e1,
-                chunk=plan.chunk, levels=lv, chunk_skip=chunk_skip,
-                num_buckets=plan.buckets if plan.method in ("sort", "radix")
-                else None)
-        with obs_trace.span("groupby.finalize"):
-            sums = acc_mod.finalize(table, spec)             # (G, ncols)
-    else:
-        sums = jnp.zeros((num_segments, 0), spec.dtype)
-
-    mins, maxs = {}, {}
-    mm = _minmax_cols(plans)
-    if mm:
-        with obs_trace.span("groupby.minmax", ncols=len(mm)):
-            for j in mm:
-                mins[j] = jax.ops.segment_min(v[:, j], keys, num_segments)
-                maxs[j] = jax.ops.segment_max(v[:, j], keys, num_segments)
-
-    out = _finalize_plans(names, plans, sums, mins, maxs, spec)
+    state = partial_agg(values, keys, num_segments, aggs=aggs, spec=spec,
+                        method=method, chunk=chunk, levels=levels,
+                        check_finite=check_finite)
+    out = finalize(state)
     if return_table:
-        if table is None:
-            table = acc_mod.zeros(spec, (num_segments, 0))
-        return out, table
+        return out, state.table
     return out

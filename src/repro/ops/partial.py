@@ -1,0 +1,527 @@
+"""The GROUPBY engine as an explicit algebra: partial / merge / finalize.
+
+The paper's central payoff is that the accumulator is *associative*: any
+partition of the input into partial aggregates merges to the bit-identical
+result.  This module makes that algebra first-class (DESIGN.md §14):
+
+* :func:`partial_agg` — aggregate a batch of rows into a
+  :class:`PartialState`: the ``(G, ncols, L)`` accumulator table on the
+  batch's own per-column lattice, stacked MIN/MAX columns, and a row count;
+* :func:`merge` — combine two states **bitwise-associatively**.  Per-column
+  ``e1`` mismatch is resolved by :func:`repro.core.accumulator.demote_to`
+  onto the pairwise-max lattice; because states carry full-L tables with
+  exact zeros on pruned levels, the live-level windows of the operands
+  union for free.  Merging the partials of any row partition, in any order
+  or tree shape, equals the one-shot extraction on the union lattice bit
+  for bit (the demotion lemma, DESIGN.md §14.2);
+* :func:`finalize` — the pure deterministic function from a state to the
+  result dict every execution path shares.
+
+``groupby_agg`` is ``finalize(partial_agg(...))``;
+``sharded_groupby_agg`` is per-shard partials + collective merge +
+finalize; the streaming engine (:mod:`repro.stream`) is a persistent state
+plus ``merge`` per micro-batch.  One algebra, every deployment shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import accumulator as acc_mod
+from repro.core import aggregates
+from repro.core import prescan
+from repro.core.accumulator import ReproAcc
+from repro.core.types import FLOAT_SPECS, ReproSpec
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.ops.plan import plan_groupby
+
+__all__ = [
+    "AGG_KINDS", "AggSignature", "PartialState", "agg_name", "partial_agg",
+    "merge", "merge_all", "finalize", "empty_partial",
+]
+
+AGG_KINDS = ("sum", "count", "mean", "var", "std", "min", "max", "sum_prod")
+
+
+# ---------------------------------------------------------------------------
+# aggregate compilation (the engine's front end)
+# ---------------------------------------------------------------------------
+
+def _normalize(aggs):
+    """Accept 'sum' / ('sum', col) / ('sum_prod', i, j) forms -> tuples."""
+    norm = []
+    for a in aggs:
+        if isinstance(a, str):
+            a = (a,) if a in ("count",) else (a, 0)
+        a = tuple(a)
+        kind = a[0]
+        if kind == "avg":
+            kind, a = "mean", ("mean", *a[1:])
+        if kind == "count":
+            a = ("count",)
+        elif kind == "sum_prod":
+            if len(a) != 3:
+                raise ValueError(f"sum_prod takes two columns, got {a!r}")
+        elif len(a) != 2:
+            raise ValueError(f"aggregate {a!r} takes exactly one column")
+        if kind not in AGG_KINDS:
+            raise ValueError(f"unknown aggregate {kind!r}; want {AGG_KINDS}")
+        norm.append(a)
+    return norm
+
+
+def agg_name(a) -> str:
+    """Canonical result key: 'sum(0)', 'count(*)', 'sum_prod(0,1)', ..."""
+    a = _normalize([a])[0]
+    if a[0] == "count":
+        return "count(*)"
+    return f"{a[0]}({','.join(str(c) for c in a[1:])})"
+
+
+def _compile(aggs):
+    """Compile aggregates to (names, accumulator columns, finalize plans).
+
+    Columns are deduplicated: ``[("mean", 0), ("var", 0)]`` shares the raw
+    column and the ones column, adding only the squares column.
+    """
+    norm = _normalize(aggs)
+    cols, index = [], {}
+
+    def need(c):
+        if c not in index:
+            index[c] = len(cols)
+            cols.append(c)
+        return index[c]
+
+    plans = []
+    for a in norm:
+        kind = a[0]
+        if kind == "sum":
+            plans.append(("sum", need(("col", a[1]))))
+        elif kind == "sum_prod":
+            plans.append(("sum", need(("prod", a[1], a[2]))))
+        elif kind == "count":
+            plans.append(("count", need(("ones",))))
+        elif kind == "mean":
+            plans.append(("mean", need(("col", a[1])), need(("ones",))))
+        elif kind in ("var", "std"):
+            plans.append((kind, need(("col", a[1])), need(("sq", a[1])),
+                          need(("ones",))))
+        else:  # min / max: exact as-is, no accumulator column
+            plans.append((kind, a[1]))
+    return [agg_name(a) for a in norm], cols, plans
+
+
+def _as_matrix(values, spec: ReproSpec):
+    v = jnp.asarray(values, spec.dtype)
+    if v.ndim == 1:
+        v = v[:, None]
+    if v.ndim != 2:
+        raise ValueError(f"groupby_agg expects values (n,) or (n, C), "
+                         f"got shape {v.shape}")
+    return v
+
+
+def _build_columns(v, cols, spec: ReproSpec):
+    """Materialize the stacked accumulator-column matrix (n, ncols)."""
+    parts = []
+    for c in cols:
+        if c[0] == "col":
+            parts.append(v[:, c[1]])
+        elif c[0] == "sq":
+            parts.append(v[:, c[1]] * v[:, c[1]])
+        elif c[0] == "prod":
+            parts.append(v[:, c[1]] * v[:, c[2]])
+        else:  # ("ones",)
+            parts.append(jnp.ones(v.shape[0], spec.dtype))
+    if not parts:
+        return jnp.zeros((v.shape[0], 0), spec.dtype)
+    return jnp.stack(parts, axis=1)
+
+
+def _minmax_cols(plans):
+    return sorted({p[1] for p in plans if p[0] in ("min", "max")})
+
+
+def _col_name(c) -> str:
+    if c[0] == "ones":
+        return "ones"
+    return f"{c[0]}({','.join(str(i) for i in c[1:])})"
+
+
+# ---------------------------------------------------------------------------
+# the aggregate signature: what makes two states mergeable
+# ---------------------------------------------------------------------------
+
+def _canonical_spec(spec: ReproSpec) -> ReproSpec:
+    """Normalize the dtype object so signature equality is value equality
+    (``np.float32`` vs ``jnp.float32`` construct equal signatures)."""
+    canon = FLOAT_SPECS[np.dtype(spec.dtype)].dtype
+    if spec.dtype is canon:
+        return spec
+    return ReproSpec(dtype=canon, L=spec.L, W=spec.W)
+
+
+@dataclasses.dataclass(frozen=True)
+class AggSignature:
+    """Static identity of a partial state: two states merge iff their
+    signatures are equal (same aggregates, group count and accumulator
+    format — hence identical table/min/max shapes and result schema)."""
+
+    aggs: tuple          # normalized aggregate tuples
+    num_segments: int
+    spec: ReproSpec
+
+    @classmethod
+    def build(cls, aggs, num_segments: int,
+              spec: ReproSpec | None) -> "AggSignature":
+        spec = _canonical_spec(spec or ReproSpec())
+        return cls(aggs=tuple(_normalize(aggs)),
+                   num_segments=int(num_segments), spec=spec)
+
+    @property
+    def compiled(self):
+        """(names, accumulator columns, finalize plans) — cached."""
+        return _compiled(self)
+
+    @property
+    def ncols(self) -> int:
+        return len(self.compiled[1])
+
+    @property
+    def minmax(self):
+        return _minmax_cols(self.compiled[2])
+
+    def to_json(self) -> dict:
+        """JSON form for checkpoint manifests (exact roundtrip)."""
+        return {"aggs": [list(a) for a in self.aggs],
+                "num_segments": self.num_segments,
+                "dtype": np.dtype(self.spec.dtype).name,
+                "L": self.spec.L, "W": self.spec.W}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "AggSignature":
+        spec = ReproSpec(dtype=FLOAT_SPECS[np.dtype(d["dtype"])].dtype,
+                         L=int(d["L"]), W=int(d["W"]))
+        return cls.build([tuple(a) for a in d["aggs"]],
+                         d["num_segments"], spec)
+
+
+@functools.lru_cache(maxsize=256)
+def _compiled(sig: AggSignature):
+    return _compile(sig.aggs)
+
+
+# ---------------------------------------------------------------------------
+# the partial state (a pytree; the signature rides as static aux data)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PartialState:
+    """A mergeable partial aggregate over some subset of the rows.
+
+    Leaves: ``table`` — the integer accumulator table ``(G, ncols, L)`` on
+    this state's per-column lattice; ``minv``/``maxv`` — stacked exact
+    MIN/MAX columns ``(G, nmm)`` with the ±inf reduction identities on
+    groups the subset never touched; ``rows`` — int32 row count (exact
+    under merge, observability only).  ``sig`` is static aux data.
+    """
+
+    table: ReproAcc
+    minv: jax.Array
+    maxv: jax.Array
+    rows: jax.Array
+    sig: AggSignature
+
+    @property
+    def spec(self) -> ReproSpec:
+        return self.sig.spec
+
+    @property
+    def num_segments(self) -> int:
+        return self.sig.num_segments
+
+
+jax.tree_util.register_pytree_node(
+    PartialState,
+    lambda s: ((s.table, s.minv, s.maxv, s.rows), s.sig),
+    lambda sig, leaves: PartialState(*leaves, sig=sig),
+)
+
+
+def empty_partial(num_segments: int, aggs=("sum",),
+                  spec: ReproSpec | None = None) -> PartialState:
+    """The identity of :func:`merge`: an all-zero table at the bottom of
+    the lattice, ±inf MIN/MAX identities, zero rows."""
+    sig = AggSignature.build(aggs, num_segments, spec)
+    spec = sig.spec
+    g, nmm = sig.num_segments, len(sig.minmax)
+    return PartialState(
+        table=acc_mod.zeros(spec, (g, sig.ncols)),
+        minv=jnp.full((g, nmm), jnp.inf, spec.dtype),
+        maxv=jnp.full((g, nmm), -jnp.inf, spec.dtype),
+        rows=jnp.zeros((), jnp.int32),
+        sig=sig)
+
+
+# ---------------------------------------------------------------------------
+# non-finite contract (DESIGN.md §13.6): opt-in loud failure
+# ---------------------------------------------------------------------------
+
+def _check_finite(v, X, cols):
+    """Fail loudly on ±inf/NaN inputs and on derived columns that overflow
+    (e.g. ``var`` squaring a finite float32 past float32-max) — instead of
+    letting strategies silently diverge outside the finite contract."""
+    if not (prescan.is_concrete(v) and prescan.is_concrete(X)):
+        raise ValueError(
+            "check_finite=True needs concrete (non-traced) inputs: the "
+            "check is host-driven, like the levels='auto' prescan")
+    vn = np.asarray(v)
+    bad = ~np.isfinite(vn)
+    if bad.any():
+        where = sorted(set(np.nonzero(bad)[1].tolist()))
+        raise FloatingPointError(
+            f"non-finite input values in column(s) {where}: the "
+            "reproducibility contract covers finite inputs only "
+            "(DESIGN.md §13.6)")
+    Xn = np.asarray(X)
+    badx = ~np.isfinite(Xn)
+    if badx.any():
+        names = [_col_name(cols[j])
+                 for j in sorted(set(np.nonzero(badx)[1].tolist()))]
+        raise FloatingPointError(
+            f"derived accumulator column(s) {names} overflow to non-finite "
+            "values from finite inputs (e.g. var squaring past "
+            "float32-max); strategies legitimately diverge there "
+            "(DESIGN.md §13.6)")
+
+
+# ---------------------------------------------------------------------------
+# stage 1: partial aggregation
+# ---------------------------------------------------------------------------
+
+def _resolve_levels(levels, X, e1, spec: ReproSpec):
+    """Turn the ``levels`` request into (static window | None, chunk_skip).
+
+    ``"auto"`` + concrete inputs = the prescan pass: one vectorized stream
+    over the rows yields per-chunk, per-column exponent stats; the union of
+    the live windows becomes the static window, and per-chunk top-skipping
+    is enabled only when some chunk can prune *more* than the union (i.e.
+    the data is magnitude-heterogeneous) — homogeneous inputs skip the
+    per-chunk switch entirely so the hot loop stays branchless.
+    """
+    if levels is None:
+        return None, False
+    if levels != "auto":
+        return prescan.check_levels(levels, spec), False
+    if not (prescan.is_concrete(X) and prescan.is_concrete(e1)):
+        return None, False                      # traced: full window
+    if X.shape[0] == 0:
+        return (0, 1), False                    # empty input: all-zero table
+    probe = aggregates.default_chunk("scatter", spec)
+    stats = prescan.chunk_stats(
+        aggregates.pad_and_chunk(X, probe), spec)            # (nblk, ncols)
+    lo_a, hi_a = prescan.level_window(stats, e1[None, :], spec)
+    lo, hi = int(jnp.min(lo_a)), int(jnp.max(hi_a))
+    if lo >= hi:
+        lo, hi = 0, 1                            # degenerate: all-zero input
+    # heterogeneous when some chunk's own window starts above the union's
+    # lo, i.e. that chunk can skip more top levels than the static window
+    chunk_skip = hi - lo > 1 and bool(
+        jnp.max(jnp.min(lo_a.reshape(lo_a.shape[0], -1), axis=1)) > lo)
+    return (lo, hi), chunk_skip
+
+
+def _emit_prescan_stats(n, ncols, spec: ReproSpec, lv, chunk_skip, plan):
+    """Record what the batch-adaptive prescan proved: L vs L_eff per run,
+    chunk count, and whether the per-chunk top-skip engaged (DESIGN.md §13.4).
+    No-op when observability is disabled."""
+    l_eff = prescan.window_length(lv, spec)
+    chunks = -(-int(n) // plan.chunk) if plan.chunk else 0
+    obs_trace.event("groupby.prescan_stats", n=int(n), ncols=int(ncols),
+                    L=spec.L, L_eff=l_eff,
+                    levels=list(lv) if lv is not None else None,
+                    chunk_skip=bool(chunk_skip), chunk=plan.chunk,
+                    chunks=chunks)
+    obs_metrics.counter("repro_groupby_rows_total").inc(int(n))
+    obs_metrics.counter("repro_groupby_calls_total",
+                        method=plan.method).inc()
+    obs_metrics.counter("repro_groupby_levels_pruned_total").inc(
+        spec.L - l_eff)
+
+
+def partial_agg(values, keys, num_segments: int, aggs=("sum",),
+                spec: ReproSpec | None = None, method: str = "auto",
+                chunk: int | None = None, levels="auto",
+                check_finite: bool = False) -> PartialState:
+    """Aggregate one batch of rows into a mergeable :class:`PartialState`.
+
+    Arguments as in :func:`repro.ops.groupby_agg`; ``check_finite=True``
+    additionally rejects ±inf/NaN inputs and derived-column overflow with a
+    ``FloatingPointError`` (the §13.6 contract boundary made loud).
+
+    The state's lattice is the tightest this batch admits (per-column
+    ``required_e1``); :func:`merge` aligns mismatched lattices exactly, so
+    any micro-batching of the rows merges to the one-shot state bit for
+    bit.
+    """
+    sig = AggSignature.build(aggs, num_segments, spec)
+    spec = sig.spec
+    v = _as_matrix(values, spec)
+    keys = jnp.asarray(keys, jnp.int32).reshape(-1)
+    if v.shape[0] != keys.shape[0]:
+        raise ValueError("values and keys disagree on the row count")
+    names, cols, plans = sig.compiled
+    X = _build_columns(v, cols, spec)
+    ncols = X.shape[1]
+    if check_finite:
+        _check_finite(v, X, cols)
+
+    if ncols:
+        with obs_trace.span("groupby.prescan", n=int(X.shape[0]),
+                            ncols=ncols) as sp:
+            e1 = acc_mod.required_e1(X, spec, axis=0)        # per-column
+            lv, chunk_skip = _resolve_levels(levels, X, e1, spec)
+            sp.set(levels=list(lv) if lv is not None else None,
+                   chunk_skip=bool(chunk_skip))
+        plan = plan_groupby(int(X.shape[0]), num_segments, spec, ncols=ncols,
+                            method=method, chunk=chunk, levels=lv)
+        _emit_prescan_stats(X.shape[0], ncols, spec, lv, chunk_skip, plan)
+        with obs_trace.span("groupby.aggregate", method=plan.method,
+                            chunk=plan.chunk, buckets=plan.buckets,
+                            n=int(X.shape[0]), G=int(num_segments)):
+            table = aggregates.segment_table(
+                X, keys, num_segments, spec, method=plan.method, e1=e1,
+                chunk=plan.chunk, levels=lv, chunk_skip=chunk_skip,
+                num_buckets=plan.buckets if plan.method in ("sort", "radix")
+                else None)
+    else:
+        table = acc_mod.zeros(spec, (num_segments, 0))
+
+    mm = sig.minmax
+    if mm:
+        with obs_trace.span("groupby.minmax", ncols=len(mm)):
+            minv = jnp.stack(
+                [jax.ops.segment_min(v[:, j], keys, num_segments)
+                 for j in mm], axis=1)
+            maxv = jnp.stack(
+                [jax.ops.segment_max(v[:, j], keys, num_segments)
+                 for j in mm], axis=1)
+    else:
+        minv = jnp.zeros((num_segments, 0), spec.dtype)
+        maxv = jnp.zeros((num_segments, 0), spec.dtype)
+
+    return PartialState(table=table, minv=minv, maxv=maxv,
+                        rows=jnp.asarray(v.shape[0], jnp.int32), sig=sig)
+
+
+# ---------------------------------------------------------------------------
+# stage 2: the associative merge
+# ---------------------------------------------------------------------------
+
+def _check_sig(a: PartialState, b: PartialState):
+    if a.sig != b.sig:
+        raise ValueError(
+            "cannot merge partial states with different signatures: "
+            f"{a.sig} vs {b.sig}")
+
+
+def merge(a: PartialState, b: PartialState) -> PartialState:
+    """Bitwise-associative, commutative merge of two partial states.
+
+    The tables merge with the exact integer accumulator merge (demotion
+    onto the pairwise-max lattice, integer add, canonical renorm); MIN/MAX
+    columns merge elementwise (float min/max is exact and associative);
+    row counts add.  ``merge(partial(A), partial(B)) ==
+    partial(A ++ B)`` bit for bit, for any split — DESIGN.md §14.2.
+    """
+    _check_sig(a, b)
+    spec = a.spec
+    obs_metrics.counter("repro_partial_merges_total").inc()
+    return PartialState(
+        table=acc_mod.merge(a.table, b.table, spec),
+        minv=jnp.minimum(a.minv, b.minv),
+        maxv=jnp.maximum(a.maxv, b.maxv),
+        rows=a.rows + b.rows,
+        sig=a.sig)
+
+
+def merge_all(states) -> PartialState:
+    """Exact k-way merge (window-ring queries): one demotion onto the max
+    lattice plus one integer tree reduction.  Bit-identical to any pairwise
+    :func:`merge` fold — associativity is the whole point."""
+    states = list(states)
+    if not states:
+        raise ValueError("merge_all needs at least one state")
+    for s in states[1:]:
+        _check_sig(states[0], s)
+    if len(states) == 1:
+        return states[0]
+    spec = states[0].spec
+    obs_metrics.counter("repro_partial_merges_total").inc(len(states) - 1)
+    minv = functools.reduce(jnp.minimum, [s.minv for s in states])
+    maxv = functools.reduce(jnp.maximum, [s.maxv for s in states])
+    rows = functools.reduce(lambda x, y: x + y, [s.rows for s in states])
+    return PartialState(
+        table=acc_mod.merge_all([s.table for s in states], spec),
+        minv=minv, maxv=maxv, rows=rows, sig=states[0].sig)
+
+
+# ---------------------------------------------------------------------------
+# stage 3: finalize
+# ---------------------------------------------------------------------------
+
+def _finalize_plans(names, plans, sums, mins, maxs, spec: ReproSpec):
+    """Derive every requested aggregate from the finalized table.
+
+    Fixed elementwise formulas — pure functions of reproducible inputs, so
+    the outputs inherit bit-reproducibility.  Empty groups yield NaN for
+    MEAN/VAR/STD (the reduction identity for MIN/MAX, 0 for SUM/COUNT).
+    """
+    nan = jnp.asarray(jnp.nan, spec.dtype)
+    out = {}
+    for name, p in zip(names, plans):
+        kind = p[0]
+        if kind in ("sum", "count"):
+            r = sums[:, p[1]]
+        elif kind == "mean":
+            s, cnt = sums[:, p[1]], sums[:, p[2]]
+            r = jnp.where(cnt > 0, s / jnp.where(cnt > 0, cnt, 1), nan)
+        elif kind in ("var", "std"):
+            s, s2, cnt = sums[:, p[1]], sums[:, p[2]], sums[:, p[3]]
+            safe = jnp.where(cnt > 0, cnt, 1)
+            mean = s / safe
+            r = jnp.maximum(s2 / safe - mean * mean, 0.0)  # population var
+            if kind == "std":
+                r = jnp.sqrt(r)
+            r = jnp.where(cnt > 0, r, nan)
+        elif kind == "min":
+            r = mins[p[1]]
+        else:
+            r = maxs[p[1]]
+        out[name] = r
+    return out
+
+
+def finalize(state: PartialState):
+    """Deterministic conversion of a state to the finalized result dict.
+
+    A pure function of the canonical state, so two states that are
+    bit-identical (one-shot vs any merge tree) finalize to bit-identical
+    results — the argument that lets the streaming engine answer queries
+    mid-stream without losing the reproducibility contract.
+    """
+    sig = state.sig
+    spec = sig.spec
+    names, cols, plans = sig.compiled
+    with obs_trace.span("groupby.finalize"):
+        sums = acc_mod.finalize(state.table, spec)           # (G, ncols)
+    mm = sig.minmax
+    mins = {j: state.minv[:, i] for i, j in enumerate(mm)}
+    maxs = {j: state.maxv[:, i] for i, j in enumerate(mm)}
+    return _finalize_plans(names, plans, sums, mins, maxs, spec)

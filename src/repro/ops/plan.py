@@ -50,9 +50,10 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
 __all__ = [
-    "GroupbyPlan", "plan_groupby", "pick_chunk", "default_chunk",
-    "onehot_block_bound", "scatter_chunk_bound", "pad_and_chunk",
-    "table_bytes", "radix_buckets", "METHODS",
+    "GroupbyPlan", "PartialPlan", "plan_groupby", "plan_partial",
+    "pick_chunk", "default_chunk", "onehot_block_bound",
+    "scatter_chunk_bound", "pad_and_chunk", "table_bytes", "radix_buckets",
+    "METHODS",
 ]
 
 METHODS = ("onehot", "scatter", "sort", "radix", "pallas", "rsum")
@@ -66,6 +67,8 @@ _EXTRACT_COST = 4.0   # EFT + scale-to-int, per row per level
 _SCATTER_COST = 32.0  # random table access, per row per level, in cache
 _SPILL_FACTOR = 4.0   # penalty multiplier once the table leaves the cache
 _PARTITION_COST = 8.0  # counting-sort partition: 2 streaming passes per row
+_MERGE_COST = 6.0      # state merge, per table element: demote gather +
+                       # where + int add + renorm shift/mask
 _CACHE_BYTES = DEFAULT_CACHE_BYTES
 
 
@@ -247,3 +250,62 @@ def plan_groupby(n: int, num_segments: int, spec: ReproSpec, ncols: int = 1,
                     buckets=buckets if best in ("sort", "radix") else 1,
                     source=source),
         n, num_segments, ncols, backend, levels)
+
+
+# ---------------------------------------------------------------------------
+# partial planning: micro-batch strategy + merge amortization
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PartialPlan:
+    """A dispatch decision for streaming partial aggregation.
+
+    ``agg`` is the per-micro-batch strategy (small batches naturally plan
+    onto scatter; the partition/matmul strategies only win once a batch is
+    large enough to amortize their setup).  ``merge_rows`` prices one store
+    merge — demote + integer add + renorm over the whole ``(G, ncols,
+    L_eff)`` table, *independent of the batch size* — in units of
+    aggregated rows, and ``coalesce`` is the number of micro-batches worth
+    buffering per store merge so the merge overhead stays at or below
+    ``merge_frac`` of the aggregation work.  A batch that dwarfs the table
+    coalesces to 1 (merge per batch); a trickle of tiny deltas into a huge
+    table coalesces aggressively.
+    """
+
+    agg: GroupbyPlan     # per-micro-batch execution plan
+    merge_rows: float    # one store merge, in row-equivalents
+    coalesce: int        # micro-batches to buffer per store merge
+    reason: str          # one line of rationale
+
+
+def plan_partial(n: int, num_segments: int, spec: ReproSpec, ncols: int = 1,
+                 backend: str | None = None, method: str = "auto",
+                 chunk: int | None = None, levels=None, calibration="auto",
+                 merge_frac: float = 0.25,
+                 max_coalesce: int = 64) -> PartialPlan:
+    """Plan streaming partial aggregation for ``n``-row micro-batches into a
+    ``(G, ncols)`` store.  Deterministic in its arguments; like
+    :func:`plan_groupby` it is purely a throughput decision — any choice is
+    bit-compatible with any other (merging is exact regardless of how the
+    partials were computed or buffered).
+    """
+    agg = plan_groupby(n, num_segments, spec, ncols=ncols, backend=backend,
+                       method=method, chunk=chunk, levels=levels,
+                       calibration=calibration)
+    nlev = window_length(levels, spec)
+    per_row = agg.cost if agg.cost > 0 else _EXTRACT_COST * nlev
+    merge_units = _MERGE_COST * num_segments * max(int(ncols), 1) * nlev
+    merge_rows = merge_units / per_row
+    n = max(int(n), 1)
+    coalesce = max(1, min(max_coalesce,
+                          -(-int(merge_rows) // max(int(merge_frac * n), 1))))
+    reason = (f"merge ≈ {merge_rows:.0f} row-equivalents vs {n}-row "
+              f"batches; coalesce {coalesce} batch(es) holds merge "
+              f"overhead ≤ {merge_frac:.0%} ({agg.method}/{agg.source})")
+    obs_trace.event("plan.partial", method=agg.method, chunk=agg.chunk,
+                    merge_rows=merge_rows, coalesce=coalesce, n=n,
+                    G=int(num_segments), ncols=int(ncols), reason=reason)
+    obs_metrics.counter("repro_plan_partial_total",
+                        method=agg.method).inc()
+    return PartialPlan(agg=agg, merge_rows=merge_rows, coalesce=coalesce,
+                       reason=reason)

@@ -1,19 +1,24 @@
-"""Sharded reproducible GROUPBY: per-shard tables + exact collective merge.
+"""Sharded reproducible GROUPBY: per-shard partials + exact collective merge.
 
 The paper merges per-thread private hash tables into a shared table with the
 exact accumulator ``operator+=`` — schedule-independent because the merge is
-integer arithmetic.  This module is the multi-device analogue (DESIGN.md §5
-and §10): rows are sharded over a mesh axis, each shard aggregates its slice
-into a local accumulator table with :func:`segment_table`, and the tables
-merge with :func:`repro_psum` — an integer all-reduce, hence exact and
-associative over any reduction topology.
+integer arithmetic.  This module is the multi-device analogue (DESIGN.md §5,
+§10 and §14): it is the partial/merge/finalize pipeline of
+:mod:`repro.ops.partial` with the merge stage executed as a collective —
+each shard aggregates its row slice into a local partial table with
+:func:`segment_table`, the tables merge with :func:`repro_psum` (an integer
+all-reduce, hence exact and associative over any reduction topology), and
+the replicated merged state finalizes through the same
+:func:`repro.ops.partial.finalize` every other deployment shape uses.
 
 Bit-identity across mesh shapes rests on two facts:
 
 * the lattice exponents are agreed globally *before* extraction: each shard
   takes a ``pmax`` of its per-column e1, and because the lattice snap is
   monotone, ``pmax(required_e1(shard)) == required_e1(whole input)`` — every
-  mesh extracts on the very lattice a single device would use;
+  mesh extracts on the very lattice a single device would use (so the
+  collective merge never even needs the demotion path the host-side
+  :func:`repro.ops.partial.merge` carries for mismatched micro-batches);
 * everything after extraction is integer (table psum) or exactly associative
   (MIN/MAX via ``pmin``/``pmax``), and the finalizer is a pure function.
 
@@ -32,39 +37,30 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core import accumulator as acc_mod
 from repro.core import aggregates, collectives
+from repro.core.accumulator import ReproAcc
 from repro.core.types import ReproSpec
-from repro.ops.groupby import (_build_columns, _compile, _finalize_plans,
-                               _as_matrix, _minmax_cols)
+from repro.ops.partial import (AggSignature, PartialState, _as_matrix,
+                               _build_columns, finalize)
 from repro.ops.plan import plan_groupby
 
-__all__ = ["sharded_groupby_agg"]
+__all__ = ["sharded_groupby_agg", "sharded_partial_agg"]
 
 
-def sharded_groupby_agg(values, keys, num_segments: int, aggs=("sum",),
+def sharded_partial_agg(values, keys, num_segments: int, aggs=("sum",),
                         spec: ReproSpec | None = None, mesh=None,
                         axis_name: str = "data", method: str = "auto",
                         chunk: int | None = None,
-                        levels: tuple[int, int] | None = None):
-    """Multi-device :func:`repro.ops.groupby_agg` over a row-sharded table.
-
-    Args:
-      values/keys/num_segments/aggs/spec/method/chunk: as in
-        :func:`groupby_agg`.
-      mesh:      mesh to shard rows over; default 1-D mesh of every device.
-      axis_name: mesh axis carrying the rows.
-      levels:    optional static live-level window.  Must be proved against
-        the *global* lattice and data (e.g. ``prescan.static_window`` over
-        the whole column matrix before sharding) — each shard extracts on
-        the global ``pmax`` lattice, so a window valid for the whole input
-        is valid on every shard, and the pruned per-shard tables stay
-        bit-identical to unpruned ones under the integer psum merge.
-
-    Rows are padded to the shard count with a dump group that is sliced off
-    after the merge, so any device count accepts any row count.  Returns the
-    same dict as :func:`groupby_agg`, replicated; bit-identical to the
-    single-device result for every mesh shape.
+                        levels: tuple[int, int] | None = None
+                        ) -> PartialState:
+    """Multi-device partial aggregation: shard rows, aggregate locally on
+    the globally agreed lattice, merge collectively.  Returns the same
+    replicated :class:`PartialState` a single-device
+    :func:`repro.ops.partial.partial_agg` over all rows would return, bit
+    for bit — so it composes with the host-side ``merge`` (e.g. a stream
+    store ingesting sharded micro-batches) like any other partial.
     """
-    spec = spec or ReproSpec()
+    sig = AggSignature.build(aggs, num_segments, spec)
+    spec = sig.spec
     v = _as_matrix(values, spec)
     keys = jnp.asarray(keys, jnp.int32).reshape(-1)
     if v.shape[0] != keys.shape[0]:
@@ -72,10 +68,11 @@ def sharded_groupby_agg(values, keys, num_segments: int, aggs=("sum",),
     if mesh is None:
         mesh = jax.make_mesh((jax.device_count(),), (axis_name,))
     nshards = mesh.shape[axis_name]
+    nrows = v.shape[0]
 
-    names, cols, plans = _compile(aggs)
+    _, cols, _ = sig.compiled
     X = _build_columns(v, cols, spec)
-    mm = _minmax_cols(plans)
+    mm = sig.minmax
     M = (jnp.stack([v[:, j] for j in mm], axis=1) if mm
          else jnp.zeros((v.shape[0], 0), spec.dtype))
 
@@ -102,20 +99,52 @@ def sharded_groupby_agg(values, keys, num_segments: int, aggs=("sum",),
                 num_buckets=plan.buckets if plan.method in ("sort", "radix")
                 else None)
             tab = collectives.repro_psum(tab, spec, (axis_name,))
-            sums = acc_mod.finalize(tab, spec)               # (G+1, ncols)
         else:
-            sums = jnp.zeros((nseg1, 0), spec.dtype)
+            tab = acc_mod.zeros(spec, (nseg1, 0))
         mins = lax.pmin(jax.ops.segment_min(m_s, id_s, nseg1), axis_name)
         maxs = lax.pmax(jax.ops.segment_max(m_s, id_s, nseg1), axis_name)
-        return sums, mins, maxs
+        return tab.k, tab.C, tab.e1, mins, maxs
 
     fn = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(axis_name), P(axis_name), P(axis_name)),
-        out_specs=(P(), P(), P()), axis_names={axis_name})
-    sums, mins, maxs = jax.jit(fn)(X, keys, M)
+        out_specs=(P(), P(), P(), P(), P()), axis_names={axis_name})
+    k, C, e1, mins, maxs = jax.jit(fn)(X, keys, M)
 
-    sums = sums[:num_segments]
-    mins = {j: mins[:num_segments, i] for i, j in enumerate(mm)}
-    maxs = {j: maxs[:num_segments, i] for i, j in enumerate(mm)}
-    return _finalize_plans(names, plans, sums, mins, maxs, spec)
+    # slice off the dump group: what remains is exactly the partial a
+    # single device would have produced over the unpadded rows
+    table = ReproAcc(k=k[:num_segments], C=C[:num_segments],
+                     e1=e1[:num_segments])
+    return PartialState(table=table, minv=mins[:num_segments],
+                        maxv=maxs[:num_segments],
+                        rows=jnp.asarray(nrows, jnp.int32), sig=sig)
+
+
+def sharded_groupby_agg(values, keys, num_segments: int, aggs=("sum",),
+                        spec: ReproSpec | None = None, mesh=None,
+                        axis_name: str = "data", method: str = "auto",
+                        chunk: int | None = None,
+                        levels: tuple[int, int] | None = None):
+    """Multi-device :func:`repro.ops.groupby_agg` over a row-sharded table:
+    ``finalize(sharded_partial_agg(...))``.
+
+    Args:
+      values/keys/num_segments/aggs/spec/method/chunk: as in
+        :func:`groupby_agg`.
+      mesh:      mesh to shard rows over; default 1-D mesh of every device.
+      axis_name: mesh axis carrying the rows.
+      levels:    optional static live-level window.  Must be proved against
+        the *global* lattice and data (e.g. ``prescan.static_window`` over
+        the whole column matrix before sharding) — each shard extracts on
+        the global ``pmax`` lattice, so a window valid for the whole input
+        is valid on every shard, and the pruned per-shard tables stay
+        bit-identical to unpruned ones under the integer psum merge.
+
+    Rows are padded to the shard count with a dump group that is sliced off
+    after the merge, so any device count accepts any row count.  Returns the
+    same dict as :func:`groupby_agg`, replicated; bit-identical to the
+    single-device result for every mesh shape.
+    """
+    return finalize(sharded_partial_agg(
+        values, keys, num_segments, aggs=aggs, spec=spec, mesh=mesh,
+        axis_name=axis_name, method=method, chunk=chunk, levels=levels))

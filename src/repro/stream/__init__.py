@@ -1,0 +1,26 @@
+"""Streaming incremental aggregation on the partial/merge/finalize algebra.
+
+The paper proves the accumulator associative and commutative; this package
+cashes that in for unbounded streams (DESIGN.md §14.3–§14.5):
+
+* :mod:`repro.stream.store` — :class:`StreamStore`: a persistent merged
+  :class:`~repro.ops.partial.PartialState` ingesting micro-batch deltas,
+  queryable anytime, snapshot/restore verifiably bit-exact;
+* :mod:`repro.stream.window` — :class:`WindowedStore`: tumbling/sliding
+  event-time windows as a ring of mergeable partials, out-of-order and
+  late arrivals handled by the same exact merge;
+* :mod:`repro.stream.service` — an asyncio NDJSON ingest/query endpoint;
+  concurrent writers serialize onto the commutative merge, so any
+  interleaving yields the bit-identical state.
+
+The headline invariant, checked end-to-end by ``repro.obs.audit`` and
+``tests/test_stream.py``: the same rows delivered as 1, 7, or 64 permuted
+micro-batches — with or without a snapshot/restart in the middle — produce
+a store whose table and results fingerprints equal the one-shot
+``groupby_agg`` over the concatenated rows.
+"""
+from repro.stream.store import StreamStore  # noqa: F401
+from repro.stream.window import WindowedStore  # noqa: F401
+from repro.stream.service import StreamService, serve  # noqa: F401
+
+__all__ = ["StreamStore", "WindowedStore", "StreamService", "serve"]

@@ -1,0 +1,175 @@
+"""Async ingest/query endpoint for the streaming aggregation store.
+
+Concurrency model, in the spirit of :mod:`repro.launch.serve`'s batched
+driver: one event loop multiplexes many writers and readers; store access
+is serialized by an ``asyncio.Lock`` and the blocking jax work runs in the
+loop's default executor, so the protocol stays responsive while a batch
+aggregates.  Serialization is the reproducibility story — every admitted
+batch becomes a partial merged by the exact commutative ``merge``, so *any*
+interleaving of concurrent writers yields the bit-identical store state
+(the lock picks an order; the algebra makes the order irrelevant).
+
+Wire protocol: newline-delimited JSON (NDJSON) over a plain socket —
+stdlib only, trivially driven from tests and ``examples/``:
+
+  -> {"op": "ingest", "values": [[...], ...], "keys": [...]}
+  -> {"op": "query"}
+  -> {"op": "fingerprints"}
+  -> {"op": "snapshot", "directory": "..."}
+  -> {"op": "stats"}
+  <- {"ok": true, ...}  |  {"ok": false, "error": "..."}
+
+CLI (CPU demo):
+  PYTHONPATH=src python -m repro.stream.service --groups 64 \
+      --aggs sum count mean --port 8765
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import time
+
+import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.stream.store import StreamStore
+
+__all__ = ["StreamService", "serve"]
+
+
+class StreamService:
+    """Lock-serialized async facade over a :class:`StreamStore` (or any
+    object with ``ingest/query/fingerprints/snapshot``)."""
+
+    def __init__(self, store: StreamStore):
+        self.store = store
+        self._lock = asyncio.Lock()
+
+    async def _run(self, fn, *args):
+        loop = asyncio.get_running_loop()
+        async with self._lock:
+            return await loop.run_in_executor(None, fn, *args)
+
+    async def ingest(self, values, keys) -> dict:
+        t0 = time.perf_counter()
+        out = await self._run(self.store.ingest, values, keys)
+        obs_metrics.histogram("stream_service_ingest_seconds").observe(
+            time.perf_counter() - t0)
+        return out
+
+    async def query(self) -> dict:
+        out = await self._run(self.store.query)
+        return {k: np.asarray(v).tolist() for k, v in out.items()}
+
+    async def fingerprints(self) -> dict:
+        return await self._run(self.store.fingerprints)
+
+    async def snapshot(self, directory: str) -> str:
+        return await self._run(self.store.snapshot, directory)
+
+    async def stats(self) -> dict:
+        return {"batches": self.store.batches,
+                "merged_batches": self.store.merged_batches,
+                "rows": await self._run(lambda: self.store.rows)}
+
+    async def handle(self, req: dict) -> dict:
+        op = req.get("op")
+        try:
+            if op == "ingest":
+                values = np.asarray(req["values"],
+                                    self.store.sig.spec.dtype)
+                keys = np.asarray(req["keys"], np.int32)
+                return {"ok": True, **(await self.ingest(values, keys))}
+            if op == "query":
+                return {"ok": True, "results": await self.query()}
+            if op == "fingerprints":
+                return {"ok": True,
+                        "fingerprints": await self.fingerprints()}
+            if op == "snapshot":
+                return {"ok": True,
+                        "path": await self.snapshot(req["directory"])}
+            if op == "stats":
+                return {"ok": True, **(await self.stats())}
+            return {"ok": False, "error": f"unknown op {op!r}"}
+        except Exception as e:  # protocol boundary: report, don't die
+            obs_metrics.counter("stream_service_errors_total").inc()
+            return {"ok": False, "error": f"{type(e).__name__}: {e}"}
+
+    async def client(self, reader: asyncio.StreamReader,
+                     writer: asyncio.StreamWriter):
+        obs_metrics.counter("stream_service_connections_total").inc()
+        try:
+            while True:
+                try:
+                    line = await reader.readline()
+                except ValueError:
+                    # line exceeded the stream limit: report and drop the
+                    # connection (the buffer is beyond recovery)
+                    writer.write(json.dumps(
+                        {"ok": False,
+                         "error": "line too long (raise serve(limit=...))"}
+                    ).encode() + b"\n")
+                    await writer.drain()
+                    break
+                if not line:
+                    break
+                try:
+                    req = json.loads(line)
+                except json.JSONDecodeError as e:
+                    resp = {"ok": False, "error": f"bad json: {e}"}
+                else:
+                    resp = await self.handle(req)
+                writer.write(json.dumps(resp).encode() + b"\n")
+                await writer.drain()
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+
+#: per-line stream buffer: NDJSON ingest lines carry whole micro-batches as
+#: text, so the asyncio default of 64 KiB (~1500 rows) is far too small
+LINE_LIMIT = 2 ** 24
+
+
+async def serve(store: StreamStore, host: str = "127.0.0.1",
+                port: int = 0, limit: int = LINE_LIMIT):
+    """Start the NDJSON endpoint; returns the ``asyncio.Server`` (its
+    ``sockets[0].getsockname()`` carries the bound port when ``port=0``)."""
+    service = StreamService(store)
+    server = await asyncio.start_server(service.client, host, port,
+                                        limit=limit)
+    addr = server.sockets[0].getsockname()
+    obs_trace.event("stream.serve", host=addr[0], port=addr[1],
+                    G=store.sig.num_segments)
+    return server
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--groups", type=int, required=True)
+    ap.add_argument("--aggs", nargs="+", default=["sum"])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8765)
+    args = ap.parse_args(argv)
+
+    async def run():
+        store = StreamStore(args.groups, aggs=tuple(args.aggs))
+        server = await serve(store, args.host, args.port)
+        addr = server.sockets[0].getsockname()
+        print(f"stream service on {addr[0]}:{addr[1]} "
+              f"(G={args.groups}, aggs={args.aggs}); NDJSON ops: "
+              f"ingest/query/fingerprints/snapshot/stats")
+        async with server:
+            await server.serve_forever()
+
+    asyncio.run(run())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,240 @@
+"""Persistent streaming aggregation store: ingest micro-batches, query
+anytime, snapshot/restore bit-exactly.
+
+The store is the thinnest possible client of the partial/merge/finalize
+algebra (:mod:`repro.ops.partial`, DESIGN.md §14): it holds one
+:class:`PartialState` plus a small coalescing buffer of not-yet-merged
+batch partials.  Every invariant the stream needs is inherited, not
+re-proved:
+
+* **micro-batch-size invariance** — ``merge(partial(A), partial(B)) ==
+  partial(A ++ B)`` bit for bit, so splitting the rows into 1, 7 or 64
+  deltas leaves the queryable state unchanged;
+* **ingest-order invariance** — the merge is commutative, so permuting
+  the deltas leaves it unchanged too;
+* **restart invariance** — the state is a plain pytree of integer tables
+  and exact MIN/MAX floats; a snapshot stores its bytes, restore verifies
+  them against the manifest's byte-layout fingerprint
+  (:func:`repro.checkpoint.ckpt.verify_value`), and merging is a function
+  of those bytes only — so *snapshot + restart + remaining deltas* equals
+  the uninterrupted run bit for bit.
+
+Coalescing (``coalesce="auto"``): a store merge prices a full
+``(G, ncols, L_eff)`` demote + integer add + renorm regardless of the
+delta's size, so a trickle of tiny deltas into a big table should buffer
+several partials per merge.  :func:`repro.ops.plan.plan_partial` picks the
+buffer depth so merge overhead stays a bounded fraction of aggregation
+work; since buffered partials are merged with the same exact ``merge_all``,
+the knob moves throughput only — never bits.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core.types import ReproSpec
+from repro.obs import fingerprint as obs_fp
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.ops.partial import (AggSignature, PartialState, empty_partial,
+                               finalize, merge_all, partial_agg)
+from repro.ops.plan import plan_partial
+
+__all__ = ["StreamStore"]
+
+
+def _state_tree(state: PartialState) -> dict:
+    """The state as the plain-dict pytree checkpoints understand (the
+    :class:`PartialState` pytree registration is for jax transforms;
+    ``ckpt._flatten`` walks dict/list/tuple only)."""
+    return {"table": {"k": state.table.k, "C": state.table.C,
+                      "e1": state.table.e1},
+            "minv": state.minv, "maxv": state.maxv, "rows": state.rows}
+
+
+def _tree_state(tree: dict, sig: AggSignature) -> PartialState:
+    from repro.core.accumulator import ReproAcc
+    t = tree["table"]
+    return PartialState(table=ReproAcc(k=t["k"], C=t["C"], e1=t["e1"]),
+                        minv=tree["minv"], maxv=tree["maxv"],
+                        rows=tree["rows"], sig=sig)
+
+
+class StreamStore:
+    """Incrementally aggregated GROUPBY state over an unbounded row stream.
+
+    Args:
+      num_segments / aggs / spec / method / levels / check_finite: as in
+        :func:`repro.ops.groupby_agg`; fixed for the store's lifetime and
+        recorded in its :class:`AggSignature` (states with equal signatures
+        merge; snapshot manifests carry the signature so a restore rebuilds
+        an identical store).
+      coalesce: micro-batches to buffer per store merge.  ``"auto"``
+        (default) lets :func:`plan_partial` pick from the first batch's
+        size; an int pins it.  Throughput knob only — any value yields
+        bit-identical query results.
+    """
+
+    def __init__(self, num_segments: int, aggs=("sum",),
+                 spec: Optional[ReproSpec] = None, method: str = "auto",
+                 levels="auto", check_finite: bool = False,
+                 coalesce="auto"):
+        self.sig = AggSignature.build(aggs, num_segments, spec)
+        self.method = method
+        self.levels = levels
+        self.check_finite = check_finite
+        self._coalesce = coalesce
+        self._state = empty_partial(num_segments, self.sig.aggs,
+                                    self.sig.spec)
+        self._pending: list[PartialState] = []
+        self._plan = None
+        self.batches = 0
+        self.merged_batches = 0
+        self._t_first_ingest: Optional[float] = None
+        self._t_first_result: Optional[float] = None
+
+    # -- ingest ------------------------------------------------------------
+
+    def _coalesce_target(self, n: int) -> int:
+        if self._coalesce != "auto":
+            return max(int(self._coalesce), 1)
+        if self._plan is None:
+            self._plan = plan_partial(
+                max(n, 1), self.sig.num_segments, self.sig.spec,
+                ncols=max(self.sig.ncols, 1), method=self.method)
+        return self._plan.coalesce
+
+    def ingest(self, values, keys) -> dict:
+        """Aggregate one micro-batch (delta table) into the store.
+
+        Returns ingest stats ``{rows, batches, pending, merged}``.  Empty
+        deltas are accepted and ignored (a zero-row batch is the merge
+        identity).  Any sequence of ``ingest`` calls that delivers the same
+        multiset of rows leaves the store in the bit-identical state.
+        """
+        t0 = time.perf_counter()
+        v = np.asarray(values)
+        n = int(v.shape[0]) if v.ndim else 0
+        with obs_trace.span("stream.ingest", rows=n) as sp:
+            if n:
+                st = partial_agg(values, keys, self.sig.num_segments,
+                                 aggs=self.sig.aggs, spec=self.sig.spec,
+                                 method=self.method, levels=self.levels,
+                                 check_finite=self.check_finite)
+                self._pending.append(st)
+                if len(self._pending) >= self._coalesce_target(n):
+                    self.flush()
+            self.batches += 1
+            if self._t_first_ingest is None:
+                self._t_first_ingest = t0
+            dt = time.perf_counter() - t0
+            sp.set(pending=len(self._pending))
+        obs_metrics.counter("stream_batches_total").inc()
+        obs_metrics.counter("stream_rows_total").inc(n)
+        obs_metrics.histogram("stream_ingest_seconds").observe(dt)
+        obs_metrics.gauge("stream_pending_partials").set(len(self._pending))
+        return {"rows": n, "batches": self.batches,
+                "pending": len(self._pending),
+                "merged": self.merged_batches}
+
+    def flush(self) -> None:
+        """Merge every buffered partial into the persistent state."""
+        if not self._pending:
+            return
+        with obs_trace.span("stream.merge", pending=len(self._pending)):
+            self._state = merge_all([self._state] + self._pending)
+        self.merged_batches += len(self._pending)
+        self._pending = []
+
+    # -- query -------------------------------------------------------------
+
+    def state(self) -> PartialState:
+        """The merged :class:`PartialState` over every ingested row."""
+        self.flush()
+        return self._state
+
+    def query(self) -> dict:
+        """Finalized results over everything ingested so far.
+
+        ``finalize`` is a pure function of the canonical state, so a query
+        never perturbs the stream, and two stores whose states are
+        bit-identical answer bit-identically — mid-stream queries keep the
+        full reproducibility contract.
+        """
+        with obs_trace.span("stream.query"):
+            out = finalize(self.state())
+        if self._t_first_result is None and self._t_first_ingest is not None:
+            self._t_first_result = time.perf_counter()
+            ttfr = self._t_first_result - self._t_first_ingest
+            obs_metrics.gauge("stream_ttfr_seconds").set(ttfr)
+            obs_trace.event("stream.ttfr", seconds=ttfr)
+        obs_metrics.counter("stream_queries_total").inc()
+        return out
+
+    def fingerprints(self) -> dict:
+        """Byte-layout digests of the current state and its finalized
+        results — directly comparable against a one-shot
+        ``groupby_agg(..., return_table=True)`` over the same rows."""
+        st = self.state()
+        return {"stream/table": obs_fp.fingerprint_table(st.table),
+                "stream/results": obs_fp.fingerprint_results(finalize(st))}
+
+    @property
+    def rows(self) -> int:
+        return int(self.state().rows)
+
+    # -- snapshot / restore ------------------------------------------------
+
+    def snapshot(self, directory: str, step: Optional[int] = None,
+                 keep: int = 3) -> str:
+        """Atomic checkpoint of the merged state.  The manifest carries the
+        store's :class:`AggSignature` and the state's byte-layout
+        fingerprint, so a restore is self-describing and verifiable."""
+        st = self.state()
+        if step is None:
+            latest = ckpt.latest_step(directory)
+            step = 0 if latest is None else latest + 1
+        extra = {"kind": "stream_store",
+                 "sig": self.sig.to_json(),
+                 "batches": self.batches,
+                 "fingerprints": self.fingerprints()}
+        path = ckpt.save(directory, step, _state_tree(st), extra=extra,
+                         keep=keep)
+        obs_metrics.counter("stream_snapshots_total").inc()
+        return path
+
+    @classmethod
+    def restore(cls, directory: str, step: Optional[int] = None,
+                method: str = "auto", levels="auto",
+                check_finite: bool = False, coalesce="auto",
+                verify: bool = True) -> "StreamStore":
+        """Rebuild a store from a snapshot, bit-exactly.
+
+        The signature comes from the manifest (no caller-side schema to get
+        wrong); with ``verify=True`` (default) the restored pytree is
+        re-fingerprinted and checked against the manifest's
+        ``tree_fingerprint`` — the restart provably resumes from the very
+        bytes the snapshot froze, so *snapshot + restart + remaining
+        deltas* == the uninterrupted run.
+        """
+        manifest = ckpt.read_manifest(directory, step)
+        extra = manifest["extra"]
+        if extra.get("kind") != "stream_store":
+            raise ValueError(f"checkpoint in {directory} is not a stream "
+                             f"store snapshot (kind={extra.get('kind')!r})")
+        sig = AggSignature.from_json(extra["sig"])
+        store = cls(sig.num_segments, aggs=sig.aggs, spec=sig.spec,
+                    method=method, levels=levels, check_finite=check_finite,
+                    coalesce=coalesce)
+        skeleton = _state_tree(store._state)
+        tree, _ = ckpt.restore(directory, skeleton, step=manifest["step"])
+        if verify:
+            ckpt.verify_value(tree, directory, step=manifest["step"])
+        store._state = _tree_state(tree, sig)
+        store.batches = int(extra.get("batches", 0))
+        store.merged_batches = store.batches
+        obs_metrics.counter("stream_restores_total").inc()
+        return store

@@ -1,0 +1,268 @@
+"""Event-time windows as a ring of mergeable partial states.
+
+A window is just a partial aggregate over the rows whose event time lands
+in it — so tumbling windows are a ring of :class:`PartialState` slots, and
+a sliding window of ``n`` tumbling widths is ``merge_all`` over the last
+``n`` slots (one demotion + one integer tree-sum; exact, DESIGN.md §14.4).
+Nothing window-shaped touches the accumulator math.
+
+Event-time mechanics:
+
+* window id ``wid = floor(t / width)``; slot ``wid % retention``;
+* the **watermark** is the max event time seen.  ``max`` is commutative
+  and order-invariant, so the final watermark — and with it the set of
+  retained windows — depends only on the row multiset, not arrival order;
+* a row is **accepted** iff its window is within ``retention`` of the
+  watermark's window (late-but-in-retention rows merge into their correct
+  slot, out-of-order arrival is the normal case, not an error path);
+  rows older than that are counted in ``late_dropped`` and skipped;
+* a slot is **evicted** (reset to the merge identity) when a newer window
+  claims its residue class.
+
+Order-invariance contract: the *final queryable state* — every window
+within retention of the final watermark — is invariant under arrival
+order and micro-batching.  Proof sketch (§14.4): a row of such a window
+can never be dropped early (the watermark only grows, so if it is within
+retention at the end it was within retention on arrival; and a slot
+conflict with a newer occupant would imply the row is beyond retention,
+contradiction), so every such window holds exactly the merge of all its
+rows' partials, which is order-invariant by commutativity/associativity.
+Rows beyond final retention may or may not have been accepted en route
+(arrival-order-dependent), but every slot they touched has since been
+evicted — only the order-dependent ``late_dropped`` *count* remembers
+them, and that counter is documented as best-effort observability.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core.types import ReproSpec
+from repro.obs import fingerprint as obs_fp
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.ops.partial import (AggSignature, PartialState, empty_partial,
+                               finalize, merge, merge_all, partial_agg)
+from repro.stream.store import _state_tree, _tree_state
+
+__all__ = ["WindowedStore"]
+
+
+class WindowedStore:
+    """Tumbling/sliding event-time windows over a row stream.
+
+    Args:
+      num_segments / aggs / spec / method / levels / check_finite: as in
+        :func:`repro.ops.groupby_agg`.
+      width:     tumbling window width, in event-time units (> 0).
+      retention: ring length — number of most-recent windows kept queryable
+        (and the late-arrival horizon).  Sliding queries can span up to
+        ``retention`` windows.
+    """
+
+    def __init__(self, num_segments: int, aggs=("sum",),
+                 spec: Optional[ReproSpec] = None, *, width: float,
+                 retention: int = 8, method: str = "auto", levels="auto",
+                 check_finite: bool = False):
+        if width <= 0:
+            raise ValueError("window width must be positive")
+        if retention < 1:
+            raise ValueError("retention must be at least 1 window")
+        self.sig = AggSignature.build(aggs, num_segments, spec)
+        self.width = float(width)
+        self.retention = int(retention)
+        self.method = method
+        self.levels = levels
+        self.check_finite = check_finite
+        self._empty = empty_partial(num_segments, self.sig.aggs,
+                                    self.sig.spec)
+        self._wids = [None] * self.retention     # window id per slot
+        self._slots = [self._empty] * self.retention
+        self._max_wid: Optional[int] = None      # watermark window
+        self.late_dropped = 0                    # best-effort, order-dependent
+        self.evictions = 0
+        self.batches = 0
+
+    # -- ingest ------------------------------------------------------------
+
+    def _wid(self, t: float) -> int:
+        return int(np.floor(t / self.width))
+
+    @property
+    def watermark_wid(self) -> Optional[int]:
+        return self._max_wid
+
+    def _slot_for(self, wid: int) -> Optional[int]:
+        """Claim the slot for ``wid``, evicting an older occupant; None if
+        the window is beyond retention (caller counts it as late)."""
+        if self._max_wid is not None and \
+                wid <= self._max_wid - self.retention:
+            return None
+        i = wid % self.retention
+        cur = self._wids[i]
+        if cur is None or cur < wid:
+            if cur is not None:
+                self.evictions += 1
+            self._wids[i] = wid
+            self._slots[i] = self._empty
+        elif cur > wid:
+            # occupant is newer: cur >= wid + retention, so wid is beyond
+            # retention of the watermark that admitted cur
+            return None
+        return i
+
+    def ingest(self, values, keys, times) -> dict:
+        """Aggregate one micro-batch of (value row, key, event time).
+
+        Rows are partitioned by window on the host, one partial per touched
+        window, each merged into its slot.  Returns
+        ``{rows, accepted, late_dropped, watermark_wid}``.
+        """
+        v = np.asarray(values)
+        if v.ndim == 1:
+            v = v[:, None]
+        k = np.asarray(keys).reshape(-1)
+        t = np.asarray(times, np.float64).reshape(-1)
+        if not (v.shape[0] == k.shape[0] == t.shape[0]):
+            raise ValueError("values/keys/times disagree on the row count")
+        n = int(v.shape[0])
+        accepted = dropped = 0
+        with obs_trace.span("stream.window_ingest", rows=n) as sp:
+            if n:
+                wids = np.floor(t / self.width).astype(np.int64)
+                # advance the watermark first: rows of this very batch may
+                # push older rows of the same batch past retention on some
+                # *other* arrival order — accepting them here too would make
+                # acceptance depend on batching
+                batch_max = int(wids.max())
+                if self._max_wid is None or batch_max > self._max_wid:
+                    self._max_wid = batch_max
+                for wid in np.unique(wids):
+                    wid = int(wid)
+                    sel = wids == wid
+                    i = self._slot_for(wid)
+                    if i is None:
+                        dropped += int(sel.sum())
+                        continue
+                    st = partial_agg(v[sel], k[sel], self.sig.num_segments,
+                                     aggs=self.sig.aggs, spec=self.sig.spec,
+                                     method=self.method, levels=self.levels,
+                                     check_finite=self.check_finite)
+                    self._slots[i] = merge(self._slots[i], st)
+                    accepted += int(sel.sum())
+            self.batches += 1
+            self.late_dropped += dropped
+            sp.set(accepted=accepted, late_dropped=dropped,
+                   watermark_wid=self._max_wid)
+        obs_metrics.counter("stream_window_rows_total").inc(accepted)
+        obs_metrics.counter("stream_window_late_total").inc(dropped)
+        return {"rows": n, "accepted": accepted, "late_dropped": dropped,
+                "watermark_wid": self._max_wid}
+
+    # -- query -------------------------------------------------------------
+
+    def live_wids(self) -> list:
+        """Window ids currently retained, oldest first."""
+        lo = (self._max_wid - self.retention + 1
+              if self._max_wid is not None else 0)
+        return sorted(w for w in self._wids if w is not None and w >= lo)
+
+    def window_state(self, wid: int) -> PartialState:
+        """The partial state of one tumbling window (the merge identity for
+        retained-but-untouched windows); raises for evicted windows."""
+        lo = (self._max_wid - self.retention + 1
+              if self._max_wid is not None else 0)
+        if wid < lo:
+            raise KeyError(f"window {wid} is beyond retention "
+                           f"(watermark window {self._max_wid}, "
+                           f"retention {self.retention})")
+        i = wid % self.retention
+        if self._wids[i] != wid:
+            return self._empty
+        return self._slots[i]
+
+    def query(self, wid: int) -> dict:
+        """Finalized results for one tumbling window."""
+        return finalize(self.window_state(wid))
+
+    def query_sliding(self, nwin: int, end_wid: Optional[int] = None) -> dict:
+        """Finalized results over the sliding window of ``nwin`` tumbling
+        widths ending at ``end_wid`` (default: the watermark window) — an
+        exact k-way ``merge_all`` over the ring, bit-identical to a
+        one-shot aggregate over those windows' rows."""
+        if not 1 <= nwin <= self.retention:
+            raise ValueError(
+                f"sliding span must be in [1, retention={self.retention}]")
+        if end_wid is None:
+            end_wid = self._max_wid
+        if end_wid is None:
+            return finalize(self._empty)
+        states = [self.window_state(w)
+                  for w in range(end_wid - nwin + 1, end_wid + 1)]
+        with obs_trace.span("stream.window_query", nwin=nwin,
+                            end_wid=int(end_wid)):
+            out = finalize(merge_all(states))
+        obs_metrics.counter("stream_queries_total").inc()
+        return out
+
+    def fingerprints(self) -> dict:
+        """Per-live-window and sliding-total digests of tables+results."""
+        fps = {}
+        for w in self.live_wids():
+            st = self.window_state(w)
+            fps[f"window/{w}/table"] = obs_fp.fingerprint_table(st.table)
+            fps[f"window/{w}/results"] = obs_fp.fingerprint_results(
+                finalize(st))
+        return fps
+
+    # -- snapshot / restore ------------------------------------------------
+
+    def snapshot(self, directory: str, step: Optional[int] = None,
+                 keep: int = 3) -> str:
+        """Atomic checkpoint of the ring (every slot, occupied or identity),
+        watermark and counters; value-verifiable like the flat store."""
+        if step is None:
+            latest = ckpt.latest_step(directory)
+            step = 0 if latest is None else latest + 1
+        tree = {"slots": [_state_tree(s) for s in self._slots]}
+        extra = {"kind": "stream_window",
+                 "sig": self.sig.to_json(),
+                 "width": self.width, "retention": self.retention,
+                 "wids": [w if w is None else int(w) for w in self._wids],
+                 "max_wid": self._max_wid,
+                 "late_dropped": self.late_dropped,
+                 "evictions": self.evictions, "batches": self.batches,
+                 "fingerprints": self.fingerprints()}
+        path = ckpt.save(directory, step, tree, extra=extra, keep=keep)
+        obs_metrics.counter("stream_snapshots_total").inc()
+        return path
+
+    @classmethod
+    def restore(cls, directory: str, step: Optional[int] = None,
+                method: str = "auto", levels="auto",
+                check_finite: bool = False,
+                verify: bool = True) -> "WindowedStore":
+        manifest = ckpt.read_manifest(directory, step)
+        extra = manifest["extra"]
+        if extra.get("kind") != "stream_window":
+            raise ValueError(f"checkpoint in {directory} is not a windowed "
+                             f"store snapshot (kind={extra.get('kind')!r})")
+        sig = AggSignature.from_json(extra["sig"])
+        store = cls(sig.num_segments, aggs=sig.aggs, spec=sig.spec,
+                    width=extra["width"], retention=int(extra["retention"]),
+                    method=method, levels=levels, check_finite=check_finite)
+        skeleton = {"slots": [_state_tree(store._empty)
+                              for _ in range(store.retention)]}
+        tree, _ = ckpt.restore(directory, skeleton, step=manifest["step"])
+        if verify:
+            ckpt.verify_value(tree, directory, step=manifest["step"])
+        store._slots = [_tree_state(s, sig) for s in tree["slots"]]
+        store._wids = [w if w is None else int(w) for w in extra["wids"]]
+        store._max_wid = extra["max_wid"]
+        store.late_dropped = int(extra["late_dropped"])
+        store.evictions = int(extra["evictions"])
+        store.batches = int(extra["batches"])
+        obs_metrics.counter("stream_restores_total").inc()
+        return store

@@ -1,0 +1,141 @@
+"""Property-based tests for the partial/merge/finalize algebra (DESIGN.md §14).
+
+The refactor's contract is algebraic — ``merge`` is a bitwise-associative,
+commutative monoid operation with ``empty_partial`` as identity, and any
+merge tree over any row partition equals the one-shot ``partial_agg`` —
+so the tests are universally quantified: hypothesis drives random values
+with *wide magnitude spreads* (forcing per-column ``e1`` mismatch between
+batches, hence the ``demote_to`` path) and random splits/permutations.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional dev dependency 'hypothesis' "
+           "(pip install repro[dev])")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402,E501
+
+from repro.ops import groupby_agg  # noqa: E402
+from repro.ops.partial import (empty_partial, finalize,  # noqa: E402
+                               merge, merge_all, partial_agg)
+
+G = 4
+AGGS = ("sum", "count", "mean", "var", "min", "max", ("sum", 1))
+
+_settings = settings(max_examples=20, deadline=None,
+                     suppress_health_check=[HealthCheck.too_slow])
+
+
+# rows with magnitudes spanning ~2^±60: separate batches routinely land on
+# different lattices (disjoint live-level windows), so merging exercises
+# demotion + window union, not just the integer add
+def _rows():
+    mant = st.floats(min_value=-2.0, max_value=2.0, allow_nan=False,
+                     allow_infinity=False, width=32)
+    row = st.tuples(mant, st.integers(min_value=-60, max_value=60),
+                    mant, st.integers(min_value=-60, max_value=60),
+                    st.integers(min_value=0, max_value=G - 1))
+    return st.lists(row, min_size=1, max_size=48)
+
+
+def _unpack(rows):
+    v = np.array([[m0 * 2.0 ** e0, m1 * 2.0 ** e1]
+                  for m0, e0, m1, e1, _ in rows], np.float32)
+    k = np.array([r[4] for r in rows], np.int32)
+    return v, k
+
+
+def _part(v, k, levels="auto"):
+    return partial_agg(v, k, G, aggs=AGGS, levels=levels)
+
+
+def assert_states_equal(a, b):
+    assert a.sig == b.sig
+    for x, y in [(a.table.k, b.table.k), (a.table.C, b.table.C),
+                 (a.table.e1, b.table.e1), (a.minv, b.minv),
+                 (a.maxv, b.maxv), (a.rows, b.rows)]:
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@given(_rows(), st.data())
+@_settings
+def test_fold_equals_one_shot(rows, data):
+    """partial(A ++ B ++ ...) == any pairwise fold of the batch partials,
+    even when each batch lands on a different lattice (demotion lemma)."""
+    v, k = _unpack(rows)
+    ncut = data.draw(st.integers(min_value=1, max_value=min(4, len(rows))))
+    parts = [
+        _part(vi, ki) for vi, ki in
+        zip(np.array_split(v, ncut), np.array_split(k, ncut))]
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = merge(acc, p)
+    assert_states_equal(acc, _part(v, k))
+
+
+@given(_rows(), st.data())
+@_settings
+def test_merge_associative_commutative(rows, data):
+    if len(rows) < 3:            # need three non-empty batches
+        rows = (rows * 3)[:3]
+    v, k = _unpack(rows)
+    cuts = sorted(data.draw(
+        st.sets(st.integers(min_value=1, max_value=len(rows) - 1),
+                min_size=2, max_size=2)))
+    idx = [0] + cuts + [len(rows)]
+    a, b, c = (_part(v[i:j], k[i:j]) for i, j in zip(idx[:-1], idx[1:]))
+    assert_states_equal(merge(merge(a, b), c), merge(a, merge(b, c)))
+    assert_states_equal(merge(a, b), merge(b, a))
+    # k-way merge equals the pairwise fold, in any operand order
+    perm = data.draw(st.permutations([a, b, c]))
+    assert_states_equal(merge_all(perm), merge(merge(a, b), c))
+
+
+@given(_rows())
+@_settings
+def test_empty_is_identity(rows):
+    v, k = _unpack(rows)
+    s = _part(v, k)
+    e = empty_partial(G, AGGS)
+    assert_states_equal(merge(e, s), s)
+    assert_states_equal(merge(s, e), s)
+    assert_states_equal(merge_all([e, s, e]), s)
+
+
+@given(_rows(), st.data())
+@_settings
+def test_finalize_of_merge_equals_groupby(rows, data):
+    """finalize(fold of partials) is bit-identical to groupby_agg — the
+    end-to-end statement the streaming engine rests on."""
+    v, k = _unpack(rows)
+    ncut = data.draw(st.integers(min_value=1, max_value=min(5, len(rows))))
+    order = data.draw(st.permutations(list(range(ncut))))
+    vs, ks = np.array_split(v, ncut), np.array_split(k, ncut)
+    merged = merge_all([_part(vs[i], ks[i]) for i in order])
+    got = finalize(merged)
+    want = groupby_agg(v, k, G, aggs=AGGS)
+    assert list(got) == list(want)
+    for name in want:
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(want[name]))
+
+
+@given(_rows())
+@_settings
+def test_full_window_vs_pruned_window_merge(rows):
+    """States built with pruned live-level windows (levels='auto') merge
+    bit-identically to full-window states: pruned levels hold exact zeros,
+    so the window union is free."""
+    v, k = _unpack(rows)
+    cut = max(len(rows) // 2, 1)
+    auto = merge(_part(v[:cut], k[:cut], levels="auto"),
+                 _part(v[cut:], k[cut:], levels="auto"))
+    full = merge(_part(v[:cut], k[:cut], levels=None),
+                 _part(v[cut:], k[cut:], levels=None))
+    assert_states_equal(auto, full)
+
+
+# Non-hypothesis sanity tests for the same algebra (signature gating, JSON
+# round-trip, dtype canonicalization) live in tests/test_stream.py so they
+# run even where the optional hypothesis dependency is absent.

@@ -1,0 +1,404 @@
+"""Streaming engine tests: micro-batch/order/restart invariance, windows,
+the finite-input contract, the partial planner and the async service.
+
+The headline assertions are fingerprint equalities against the one-shot
+``groupby_agg`` — the same bitwise contract ``repro.obs.audit`` checks
+across fresh processes, here checked in-process for every stream shape.
+"""
+import asyncio
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.core.types import ReproSpec
+from repro.obs.fingerprint import fingerprint_results, fingerprint_table
+from repro.ops import groupby_agg, plan_partial
+from repro.ops.partial import AggSignature, merge, merge_all, partial_agg
+from repro.stream import StreamStore, WindowedStore, serve
+
+G = 29
+AGGS = ("sum", "count", "mean", "var", "min", "max", ("sum", 1))
+
+
+def _data(n=3000, seed=0, spread=15.0):
+    rng = np.random.default_rng(seed)
+    v = (rng.standard_normal((n, 2)) *
+         np.exp(rng.uniform(-spread, spread, (n, 2)))).astype(np.float32)
+    k = rng.integers(0, G, n).astype(np.int32)
+    return v, k
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    v, k = _data()
+    ref, tab = groupby_agg(v, k, G, aggs=AGGS, return_table=True)
+    return v, k, {"stream/table": fingerprint_table(tab),
+                  "stream/results": fingerprint_results(ref)}
+
+
+def _batches(v, k, nb, seed):
+    rng = np.random.default_rng(seed)
+    idx = np.array_split(np.arange(v.shape[0]), nb)
+    return [(v[idx[i]], k[idx[i]]) for i in rng.permutation(nb)]
+
+
+# ---------------------------------------------------------------------------
+# flat store: the audit invariant, in-process
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nb", [1, 7, 64])
+def test_store_batch_count_and_order_invariant(dataset, nb):
+    v, k, want = dataset
+    store = StreamStore(G, aggs=AGGS)
+    for bv, bk in _batches(v, k, nb, seed=nb):
+        store.ingest(bv, bk)
+    assert store.fingerprints() == want
+    assert store.rows == v.shape[0]
+
+
+@pytest.mark.parametrize("coalesce", [1, 5, "auto"])
+def test_store_coalesce_is_bit_free(dataset, coalesce):
+    v, k, want = dataset
+    store = StreamStore(G, aggs=AGGS, coalesce=coalesce)
+    for bv, bk in _batches(v, k, 16, seed=3):
+        store.ingest(bv, bk)
+    assert store.fingerprints() == want
+
+
+def test_store_empty_batches_are_identity(dataset):
+    v, k, want = dataset
+    store = StreamStore(G, aggs=AGGS)
+    store.ingest(np.zeros((0, 2), np.float32), np.zeros(0, np.int32))
+    for bv, bk in _batches(v, k, 5, seed=4):
+        store.ingest(bv, bk)
+        store.ingest(np.zeros((0, 2), np.float32), np.zeros(0, np.int32))
+    assert store.fingerprints() == want
+    assert store.batches == 11
+
+
+def test_store_query_mid_stream_does_not_perturb(dataset):
+    v, k, want = dataset
+    store = StreamStore(G, aggs=AGGS)
+    for bv, bk in _batches(v, k, 7, seed=5):
+        store.ingest(bv, bk)
+        store.query()                       # finalize is pure
+    assert store.fingerprints() == want
+
+
+def test_store_snapshot_restart_is_bit_exact(dataset, tmp_path):
+    v, k, want = dataset
+    d = str(tmp_path / "ckpt")
+    store = StreamStore(G, aggs=AGGS)
+    bs = _batches(v, k, 7, seed=6)
+    for bv, bk in bs[:3]:
+        store.ingest(bv, bk)
+    store.snapshot(d)
+    mid = store.fingerprints()
+
+    restored = StreamStore.restore(d)
+    assert restored.fingerprints() == mid
+    assert restored.sig == store.sig
+    for bv, bk in bs[3:]:
+        restored.ingest(bv, bk)
+    assert restored.fingerprints() == want
+
+    # the snapshot manifest itself carries the state fingerprints
+    extra = ckpt.read_manifest(d)["extra"]
+    assert extra["fingerprints"] == mid
+
+
+def test_restore_detects_tampered_bytes(dataset, tmp_path):
+    v, k, _ = dataset
+    d = str(tmp_path / "ckpt")
+    store = StreamStore(G, aggs=AGGS)
+    store.ingest(v[:100], k[:100])
+    store.snapshot(d)
+    # flip accumulator bytes but keep the npz readable: value verification
+    # must catch what storage-level checks are not looking for
+    step = f"step_{ckpt.latest_step(d):08d}"
+    npz = tmp_path / "ckpt" / step / "arrays.npz"
+    state = store.state()
+    bad_tree = {"table": {"k": np.asarray(state.table.k) + 1,
+                          "C": np.asarray(state.table.C),
+                          "e1": np.asarray(state.table.e1)},
+                "minv": np.asarray(state.minv),
+                "maxv": np.asarray(state.maxv),
+                "rows": np.asarray(state.rows)}
+    with pytest.raises(IOError, match="fingerprint"):
+        ckpt.verify_value(bad_tree, d)
+    # and a corrupted npz still trips the storage sha
+    raw = bytearray(npz.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    npz.write_bytes(bytes(raw))
+    with pytest.raises(IOError):
+        StreamStore.restore(d)
+
+
+def test_restore_rejects_foreign_checkpoints(tmp_path):
+    d = str(tmp_path / "ckpt")
+    ckpt.save(d, 0, {"w": np.ones(3)}, extra={"kind": "training"})
+    with pytest.raises(ValueError, match="not a stream store"):
+        StreamStore.restore(d)
+
+
+# ---------------------------------------------------------------------------
+# signature (mergeability contract)
+# ---------------------------------------------------------------------------
+
+def test_signature_gates_merge():
+    v = np.ones((4, 2), np.float32)
+    k = np.zeros(4, np.int32)
+    a = partial_agg(v, k, G, aggs=("sum",))
+    with pytest.raises(ValueError, match="signatures"):
+        merge(a, partial_agg(v, k, G, aggs=("sum", "count")))
+    with pytest.raises(ValueError, match="signatures"):
+        merge(a, partial_agg(v, k, G + 1, aggs=("sum",)))
+    with pytest.raises(ValueError, match="signatures"):
+        merge(a, partial_agg(v, k, G, aggs=("sum",),
+                             spec=ReproSpec(dtype=jnp.float32, L=3)))
+    with pytest.raises(ValueError, match="at least one"):
+        merge_all([])
+
+
+def test_signature_dtype_canonicalization_and_json():
+    a = AggSignature.build(AGGS, G, ReproSpec(dtype=np.float32))
+    b = AggSignature.build(AGGS, G, ReproSpec(dtype=jnp.float32))
+    assert a == b and hash(a) == hash(b)
+    assert AggSignature.from_json(a.to_json()) == a
+    # ...so states built from either spelling actually merge
+    v = np.ones((4, 2), np.float32)
+    k = np.zeros(4, np.int32)
+    m = merge(partial_agg(v, k, G, aggs=AGGS,
+                          spec=ReproSpec(dtype=np.float32)),
+              partial_agg(v, k, G, aggs=AGGS,
+                          spec=ReproSpec(dtype=jnp.float32)))
+    assert int(m.rows) == 8
+
+
+# ---------------------------------------------------------------------------
+# event-time windows
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def windowed_dataset():
+    v, k = _data(n=2000, seed=10)
+    times = np.random.default_rng(11).uniform(0, 80, 2000)
+    return v, k, times
+
+
+def test_window_sliding_query_equals_one_shot(windowed_dataset):
+    v, k, times = windowed_dataset
+    ws = WindowedStore(G, aggs=AGGS, width=10.0, retention=8)
+    ws.ingest(v, k, times)
+    for nwin, lo in [(1, 70.0), (4, 40.0), (8, 0.0)]:
+        sel = (times >= lo) & (times < 80.0)
+        want = groupby_agg(v[sel], k[sel], G, aggs=AGGS)
+        got = ws.query_sliding(nwin)
+        assert (fingerprint_results(got) == fingerprint_results(want)), nwin
+
+
+def test_window_ingest_order_and_batching_invariant(windowed_dataset):
+    v, k, times = windowed_dataset
+    ref = WindowedStore(G, aggs=AGGS, width=10.0, retention=8)
+    ref.ingest(v, k, times)
+    rng = np.random.default_rng(12)
+    for nb in (4, 16):
+        ws = WindowedStore(G, aggs=AGGS, width=10.0, retention=8)
+        idx = np.array_split(rng.permutation(v.shape[0]), nb)
+        for i in rng.permutation(nb):
+            ws.ingest(v[idx[i]], k[idx[i]], times[idx[i]])
+        assert ws.fingerprints() == ref.fingerprints()
+        assert ws.live_wids() == ref.live_wids()
+
+
+def test_window_late_arrivals_and_eviction(windowed_dataset):
+    v, k, times = windowed_dataset
+    ws = WindowedStore(G, aggs=AGGS, width=10.0, retention=4)
+    ws.ingest(v, k, times)
+    # watermark window is 7; retention 4 keeps windows 4..7
+    assert ws.watermark_wid == 7
+    assert all(w >= 4 for w in ws.live_wids())
+    with pytest.raises(KeyError, match="beyond retention"):
+        ws.window_state(3)
+    # within-retention late arrival is merged, not dropped
+    r = ws.ingest(v[:7], k[:7], np.full(7, 41.0))
+    assert r["late_dropped"] == 0 and r["accepted"] == 7
+    # beyond-retention arrival is dropped and counted
+    before = ws.late_dropped
+    r = ws.ingest(v[:5], k[:5], np.full(5, 1.0))
+    assert r["late_dropped"] == 5 and r["accepted"] == 0
+    assert ws.late_dropped == before + 5
+    # new windows advance the watermark and evict the oldest slots
+    r = ws.ingest(v[:3], k[:3], np.full(3, 95.0))
+    assert ws.watermark_wid == 9 and 4 not in ws.live_wids()
+    assert ws.evictions >= 1
+
+
+def test_window_snapshot_restore(windowed_dataset, tmp_path):
+    v, k, times = windowed_dataset
+    d = str(tmp_path / "ckpt")
+    ws = WindowedStore(G, aggs=AGGS, width=10.0, retention=8)
+    half = v.shape[0] // 2
+    ws.ingest(v[:half], k[:half], times[:half])
+    ws.snapshot(d)
+    ws2 = WindowedStore.restore(d)
+    assert ws2.fingerprints() == ws.fingerprints()
+    ws.ingest(v[half:], k[half:], times[half:])
+    ws2.ingest(v[half:], k[half:], times[half:])
+    assert ws2.fingerprints() == ws.fingerprints()
+    assert fingerprint_results(ws2.query_sliding(8)) == \
+        fingerprint_results(ws.query_sliding(8))
+
+
+def test_window_rejects_bad_shapes_and_params():
+    with pytest.raises(ValueError, match="width"):
+        WindowedStore(G, width=0.0)
+    with pytest.raises(ValueError, match="retention"):
+        WindowedStore(G, width=1.0, retention=0)
+    ws = WindowedStore(G, width=1.0)
+    with pytest.raises(ValueError, match="row count"):
+        ws.ingest(np.ones((3, 1), np.float32), np.zeros(3, np.int32),
+                  np.zeros(2))
+    with pytest.raises(ValueError, match="sliding span"):
+        ws.query_sliding(9)
+
+
+# ---------------------------------------------------------------------------
+# check_finite: the §13.6 contract made loud
+# ---------------------------------------------------------------------------
+
+def test_check_finite_rejects_nonfinite_inputs():
+    v = np.ones((8, 2), np.float32)
+    k = np.zeros(8, np.int32)
+    v[3, 1] = np.inf
+    with pytest.raises(FloatingPointError, match=r"column\(s\) \[1\]"):
+        groupby_agg(v, k, G, aggs=AGGS, check_finite=True)
+    v[3, 1] = np.nan
+    with pytest.raises(FloatingPointError, match="non-finite input"):
+        partial_agg(v, k, G, aggs=AGGS, check_finite=True)
+    # the silent default is unchanged
+    groupby_agg(v, k, G, aggs=("count",))
+
+
+def test_check_finite_rejects_derived_overflow():
+    # finite f32 whose square overflows f32: var's sq column goes inf
+    v = np.full((4, 1), 1e30, np.float32)
+    k = np.zeros(4, np.int32)
+    with pytest.raises(FloatingPointError, match=r"sq\(0\)"):
+        groupby_agg(v, k, G, aggs=("var",), check_finite=True)
+    # without var, the same data is fine
+    groupby_agg(v, k, G, aggs=("sum", "min"), check_finite=True)
+
+
+def test_check_finite_requires_concrete_inputs():
+    v = np.ones((4, 1), np.float32)
+    k = np.zeros(4, np.int32)
+
+    fn = jax.jit(lambda vv: groupby_agg(vv, k, G, check_finite=True))
+    with pytest.raises(ValueError, match="concrete"):
+        fn(v)
+
+
+# ---------------------------------------------------------------------------
+# partial planner
+# ---------------------------------------------------------------------------
+
+def test_plan_partial_amortizes_merges():
+    spec = ReproSpec()
+    tiny = plan_partial(64, 100_000, spec, ncols=3)
+    huge = plan_partial(5_000_000, 64, spec, ncols=3)
+    # tiny deltas into a big table buffer aggressively; huge batches don't
+    assert tiny.coalesce > 1
+    assert huge.coalesce == 1
+    assert tiny.merge_rows > 0 and tiny.reason
+    # deterministic in its arguments
+    assert plan_partial(64, 100_000, spec, ncols=3) == tiny
+    # the knob is bounded
+    assert plan_partial(1, 10_000_000, spec).coalesce <= 64
+
+
+# ---------------------------------------------------------------------------
+# async service: concurrent writers serialize onto the commutative merge
+# ---------------------------------------------------------------------------
+
+def test_service_concurrent_writers_match_one_shot(dataset):
+    v, k, want = dataset
+    n = v.shape[0]
+
+    async def run():
+        store = StreamStore(G, aggs=AGGS)
+        server = await serve(store, port=0)
+        port = server.sockets[0].getsockname()[1]
+
+        async def writer(lo, hi, step):
+            r, w = await asyncio.open_connection("127.0.0.1", port)
+            for a in range(lo, hi, step):
+                b = min(a + step, hi)
+                req = {"op": "ingest", "values": v[a:b].tolist(),
+                       "keys": k[a:b].tolist()}
+                w.write(json.dumps(req).encode() + b"\n")
+                await w.drain()
+                assert json.loads(await r.readline())["ok"]
+            w.close()
+            await w.wait_closed()
+
+        quarters = np.linspace(0, n, 5).astype(int)
+        await asyncio.gather(*(writer(int(a), int(b), 137) for a, b in
+                               zip(quarters[:-1], quarters[1:])))
+
+        r, w = await asyncio.open_connection("127.0.0.1", port)
+        for req, key in [({"op": "fingerprints"}, "fingerprints"),
+                         ({"op": "stats"}, "rows"),
+                         ({"op": "bogus"}, None)]:
+            w.write(json.dumps(req).encode() + b"\n")
+            await w.drain()
+            resp = json.loads(await r.readline())
+            if key is None:
+                assert not resp["ok"] and "unknown op" in resp["error"]
+            else:
+                assert resp["ok"]
+                if key == "rows":
+                    assert resp["rows"] == n
+                else:
+                    fps = resp[key]
+        w.close()
+        await w.wait_closed()
+        server.close()
+        await server.wait_closed()
+        return fps
+
+    fps = asyncio.run(run())
+    assert fps == want
+
+
+def test_service_reports_errors_inline():
+    async def run():
+        store = StreamStore(G, aggs=("sum",))
+        server = await serve(store, port=0)
+        port = server.sockets[0].getsockname()[1]
+        r, w = await asyncio.open_connection("127.0.0.1", port)
+        # mismatched rows must come back as an error line, not kill the
+        # connection
+        w.write(b'{"op": "ingest", "values": [[1.0], [2.0]], "keys": [0]}\n')
+        await w.drain()
+        resp = json.loads(await r.readline())
+        w.write(b'not json\n')
+        await w.drain()
+        resp2 = json.loads(await r.readline())
+        w.write(b'{"op": "stats"}\n')
+        await w.drain()
+        resp3 = json.loads(await r.readline())
+        w.close()
+        await w.wait_closed()
+        server.close()
+        await server.wait_closed()
+        return resp, resp2, resp3
+
+    resp, resp2, resp3 = asyncio.run(run())
+    assert not resp["ok"] and "row count" in resp["error"]
+    assert not resp2["ok"] and "bad json" in resp2["error"]
+    assert resp3["ok"] and resp3["rows"] == 0
