@@ -59,14 +59,24 @@ def _geomean(rows, key):
     return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else None
 
 
-def _ab_slowdown(fn, base, *args, rounds: int = 3, iters: int = 2) -> float:
+def _ab_slowdown(fn, base, *args, rounds: int = 3, iters: int = 2,
+                 setup_fn=None, setup_base=None) -> float:
     """Interleaved A/B slowdown: alternate (base, fn) timing rounds and
     ratio the minima.  On a noisy shared machine this is far more stable
     than timing each side once in isolation — load spikes hit both sides,
-    and the min discards them."""
+    and the min discards them.
+
+    ``setup_fn`` / ``setup_base`` run before each side's timing round, for
+    comparisons that need process state toggled (e.g. tracing on/off) —
+    keeping the toggle *inside* the interleave so both sides see the same
+    drift, rather than timing two long unequal phases."""
     tb, tf = [], []
     for _ in range(rounds):
+        if setup_base is not None:
+            setup_base()
         tb.append(timeit(base, *args, warmup=1, iters=iters, reduce="min"))
+        if setup_fn is not None:
+            setup_fn()
         tf.append(timeit(fn, *args, warmup=1, iters=iters, reduce="min"))
     return min(tf) / min(tb)
 
@@ -259,14 +269,18 @@ def run_obs_overhead(quick: bool = True):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     trace_path = os.path.join(RESULTS_DIR, "obs_overhead.jsonl")
     was_enabled, old_path = obs_trace.enabled(), obs_trace.sink_path()
-    t_on, t_off = [], []
     try:
-        for _ in range(3):                 # interleaved A/B (see _ab_slowdown)
-            obs_trace.configure(path=trace_path)
-            t_on.append(timeit(call, v, ids, warmup=1, iters=2, reduce="min"))
-            obs_trace.disable()
-            t_off.append(timeit(call, v, ids, warmup=1, iters=2,
-                                reduce="min"))
+        # the enabled/disabled pair through the same interleaved A/B
+        # min-timing harness as the fig7 sweep: the state toggle happens
+        # between every round, so noise and drift hit both sides equally
+        # (a one-phase-each measurement once produced a nonsensical
+        # negative overhead here)
+        slowdown = _ab_slowdown(
+            call, call, v, ids, rounds=5, iters=3,
+            setup_fn=lambda: obs_trace.configure(path=trace_path),
+            setup_base=obs_trace.disable)
+        obs_trace.disable()
+        t_eager = timeit(call, v, ids, warmup=1, iters=3, reduce="min")
 
         # disabled fast path, measured directly: one no-op span + attr set,
         # one no-op event, times the site count on the engine's hot path
@@ -286,9 +300,8 @@ def run_obs_overhead(quick: bool = True):
         else:
             obs_trace.disable()
 
-    t_eager = min(t_off)
     out = {"n": n, "eager_call_s": t_eager,
-           "enabled_overhead_frac": min(t_on) / t_eager - 1.0,
+           "enabled_overhead_frac": slowdown - 1.0,
            "noop_site_cost_ns": noop_cost * 1e9,
            "instr_sites": sites,
            "disabled_overhead_frac": sites * noop_cost / t_eager}

@@ -8,9 +8,40 @@ shim translates for older jax so one codebase runs on both.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
-__all__ = ["shard_map", "axis_size", "set_mesh"]
+__all__ = ["shard_map", "axis_size", "set_mesh",
+           "enable_compilation_cache"]
+
+
+def enable_compilation_cache(cache_dir: str | None = None) -> str | None:
+    """Point jax at a persistent XLA compilation cache, so a fresh process
+    skips compiles it has paid for before (cold TTFR ≈ warm TTFR).
+
+    Reproducibility-safe by construction: the cache stores *compiled
+    executables keyed by HLO + compile options + backend*, so a hit returns
+    the same program that a recompile would produce — bits cannot change,
+    only compile latency.  Off by default; :mod:`repro` enables it at
+    import when the ``REPRO_COMPILATION_CACHE`` env var names a directory.
+
+    Returns the cache dir on success, ``None`` if this jax build lacks the
+    config knobs (old releases) — callers treat that as "cache unavailable",
+    never an error.
+    """
+    cache_dir = cache_dir or os.environ.get("REPRO_COMPILATION_CACHE")
+    if not cache_dir:
+        return None
+    try:
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        # cache everything, even sub-second compiles: streaming ingest is
+        # exactly the many-small-programs workload the defaults skip
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    except (AttributeError, ValueError):
+        return None
+    return cache_dir
 
 
 def set_mesh(mesh):

@@ -41,8 +41,9 @@ from repro.obs import trace as obs_trace
 from repro.ops.plan import plan_groupby
 
 __all__ = [
-    "AGG_KINDS", "AggSignature", "PartialState", "agg_name", "partial_agg",
-    "merge", "merge_all", "finalize", "empty_partial",
+    "AGG_KINDS", "AggSignature", "PartialState", "PartialPipeline",
+    "agg_name", "partial_agg", "merge", "merge_all", "merge_all_jit",
+    "finalize", "empty_partial", "pipeline_for", "state_nbytes",
 ]
 
 AGG_KINDS = ("sum", "count", "mean", "var", "std", "min", "max", "sum_prod")
@@ -451,10 +452,9 @@ def merge(a: PartialState, b: PartialState) -> PartialState:
         sig=a.sig)
 
 
-def merge_all(states) -> PartialState:
-    """Exact k-way merge (window-ring queries): one demotion onto the max
-    lattice plus one integer tree reduction.  Bit-identical to any pairwise
-    :func:`merge` fold — associativity is the whole point."""
+def _merge_all_impl(states) -> PartialState:
+    """The metric-free body of :func:`merge_all` (shared with the jitted
+    spelling, where counters must not fire at trace time)."""
     states = list(states)
     if not states:
         raise ValueError("merge_all needs at least one state")
@@ -463,13 +463,44 @@ def merge_all(states) -> PartialState:
     if len(states) == 1:
         return states[0]
     spec = states[0].spec
-    obs_metrics.counter("repro_partial_merges_total").inc(len(states) - 1)
     minv = functools.reduce(jnp.minimum, [s.minv for s in states])
     maxv = functools.reduce(jnp.maximum, [s.maxv for s in states])
     rows = functools.reduce(lambda x, y: x + y, [s.rows for s in states])
     return PartialState(
         table=acc_mod.merge_all([s.table for s in states], spec),
         minv=minv, maxv=maxv, rows=rows, sig=states[0].sig)
+
+
+def merge_all(states) -> PartialState:
+    """Exact k-way merge (window-ring queries): one demotion onto the max
+    lattice plus one integer tree reduction.  Bit-identical to any pairwise
+    :func:`merge` fold — associativity is the whole point."""
+    states = list(states)
+    if len(states) > 1:
+        obs_metrics.counter("repro_partial_merges_total").inc(len(states) - 1)
+    return _merge_all_impl(states)
+
+
+_merge_all_traced = jax.jit(_merge_all_impl)
+
+
+def merge_all_jit(states) -> PartialState:
+    """:func:`merge_all` through a cached XLA executable.
+
+    The jit cache keys on the pytree structure — state count, signature
+    (static aux data) and table shapes — so a streaming store flushing the
+    same-depth coalescing buffer hits a compiled merge every time.  The
+    merge is integer adds, exact float min/max and a canonical renorm;
+    fusion cannot reassociate any of it, and bit-equality with the eager
+    spelling is pinned by tests (``tests/test_stream_pipeline.py``).
+    """
+    states = list(states)
+    if not states:
+        raise ValueError("merge_all needs at least one state")
+    if len(states) == 1:
+        return states[0]
+    obs_metrics.counter("repro_partial_merges_total").inc(len(states) - 1)
+    return _merge_all_traced(states)
 
 
 # ---------------------------------------------------------------------------
@@ -525,3 +556,132 @@ def finalize(state: PartialState):
     mins = {j: state.minv[:, i] for i, j in enumerate(mm)}
     maxs = {j: state.maxv[:, i] for i, j in enumerate(mm)}
     return _finalize_plans(names, plans, sums, mins, maxs, spec)
+
+
+# ---------------------------------------------------------------------------
+# the compiled partial pipeline (streaming prepare stage)
+# ---------------------------------------------------------------------------
+
+def state_nbytes(state: PartialState) -> int:
+    """Host-memory footprint of a state's leaves (backpressure accounting)."""
+    return sum(int(np.asarray(x).nbytes)
+               for x in (state.table.k, state.table.C, state.table.e1,
+                         state.minv, state.maxv, state.rows))
+
+
+class PartialPipeline:
+    """:func:`partial_agg` specialized to one fixed :class:`AggSignature`,
+    with the jax-heavy tail compiled and cached.
+
+    Eager ``partial_agg`` re-traces its strategies on every call — fine for
+    one-shot queries, ruinous for a stream ingesting thousands of
+    same-shaped micro-batches (XLA compilation dominated the measured batch
+    cost ~10:1).  A store has exactly one signature and sees repeating
+    batch shapes, so it is the natural place to amortize compilation; this
+    class is that amortization, shared across stores (and across the shards
+    of a :class:`repro.stream.ShardedStreamStore`) via :func:`pipeline_for`.
+
+    Staging mirrors ``partial_agg`` exactly: the host-driven front (column
+    build, per-column ``required_e1``, the concrete-input prescan, planner
+    dispatch, the opt-in finite check) stays eager because its outputs are
+    *static* compilation keys; the tail — ``segment_table`` plus the
+    stacked MIN/MAX segment reductions — is one jitted function per
+    (method, chunk, buckets, level window, chunk_skip) decision, with jit
+    itself re-specializing per batch shape.  Every tail op is exact by
+    construction (integer adds, EFT extraction, float min/max), so XLA
+    fusion cannot perturb bits; compiled-vs-eager bit-equality is pinned by
+    tests and the stream benchmark's cross-check gate.  (``finalize`` is
+    deliberately *not* jitted anywhere: its float divisions are exact-input
+    -deterministic but not fusion-proof, so it keeps one canonical eager
+    execution path.)
+    """
+
+    def __init__(self, sig: AggSignature, method: str = "auto",
+                 levels="auto", check_finite: bool = False):
+        self.sig = sig
+        self.method = method
+        self.levels = tuple(levels) if isinstance(levels, list) else levels
+        self.check_finite = check_finite
+        self._tails: dict = {}
+
+    def _tail(self, method: str, chunk: int, buckets: int, levels,
+              chunk_skip: bool):
+        key = (method, chunk, buckets, levels, chunk_skip)
+        fn = self._tails.get(key)
+        if fn is not None:
+            return fn
+        sig, spec, mm = self.sig, self.sig.spec, self.sig.minmax
+
+        def tail(X, v, keys, e1):
+            table = aggregates.segment_table(
+                X, keys, sig.num_segments, spec, method=method, e1=e1,
+                chunk=chunk, levels=levels, chunk_skip=chunk_skip,
+                num_buckets=buckets if method in ("sort", "radix") else None)
+            if mm:
+                minv = jnp.stack(
+                    [jax.ops.segment_min(v[:, j], keys, sig.num_segments)
+                     for j in mm], axis=1)
+                maxv = jnp.stack(
+                    [jax.ops.segment_max(v[:, j], keys, sig.num_segments)
+                     for j in mm], axis=1)
+            else:
+                minv = jnp.zeros((sig.num_segments, 0), spec.dtype)
+                maxv = jnp.zeros((sig.num_segments, 0), spec.dtype)
+            return table, minv, maxv
+
+        # setdefault: two pool threads may race to build; one wrapper wins
+        return self._tails.setdefault(key, jax.jit(tail))
+
+    @property
+    def compiled_variants(self) -> int:
+        """Distinct plan decisions compiled so far (observability)."""
+        return len(self._tails)
+
+    def __call__(self, values, keys) -> PartialState:
+        """Aggregate one batch — bit-identical to ``partial_agg`` with this
+        pipeline's configuration, amortizing compilation across calls."""
+        sig = self.sig
+        spec = sig.spec
+        v = _as_matrix(values, spec)
+        keys = jnp.asarray(keys, jnp.int32).reshape(-1)
+        if v.shape[0] != keys.shape[0]:
+            raise ValueError("values and keys disagree on the row count")
+        names, cols, plans = sig.compiled
+        X = _build_columns(v, cols, spec)
+        ncols = X.shape[1]
+        if self.check_finite:
+            _check_finite(v, X, cols)
+        if not ncols:
+            # min/max-only stores are rare and tiny: keep one code path
+            return partial_agg(values, keys, sig.num_segments, aggs=sig.aggs,
+                               spec=spec, method=self.method,
+                               levels=self.levels,
+                               check_finite=self.check_finite)
+        with obs_trace.span("groupby.prescan", n=int(X.shape[0]),
+                            ncols=ncols) as sp:
+            e1 = acc_mod.required_e1(X, spec, axis=0)        # per-column
+            lv, chunk_skip = _resolve_levels(self.levels, X, e1, spec)
+            sp.set(levels=list(lv) if lv is not None else None,
+                   chunk_skip=bool(chunk_skip))
+        plan = plan_groupby(int(X.shape[0]), sig.num_segments, spec,
+                            ncols=ncols, method=self.method, levels=lv)
+        _emit_prescan_stats(X.shape[0], ncols, spec, lv, chunk_skip, plan)
+        fn = self._tail(plan.method, plan.chunk, plan.buckets, lv,
+                        bool(chunk_skip))
+        with obs_trace.span("groupby.aggregate", method=plan.method,
+                            chunk=plan.chunk, buckets=plan.buckets,
+                            n=int(X.shape[0]), G=int(sig.num_segments),
+                            compiled=True):
+            table, minv, maxv = fn(X, v, keys, e1)
+        return PartialState(table=table, minv=minv, maxv=maxv,
+                            rows=jnp.asarray(v.shape[0], jnp.int32), sig=sig)
+
+
+@functools.lru_cache(maxsize=64)
+def pipeline_for(sig: AggSignature, method: str = "auto", levels="auto",
+                 check_finite: bool = False) -> PartialPipeline:
+    """The shared :class:`PartialPipeline` for a configuration.  Stores and
+    shards with equal (signature, method, levels, check_finite) reuse one
+    pipeline — and therefore one set of compiled executables."""
+    return PartialPipeline(sig, method=method, levels=levels,
+                           check_finite=check_finite)

@@ -37,6 +37,7 @@ largest block whose extracted integers fit in the cache budget *beside* the
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import jax
 import numpy as np
@@ -270,12 +271,22 @@ class PartialPlan:
     ``merge_frac`` of the aggregation work.  A batch that dwarfs the table
     coalesces to 1 (merge per batch); a trickle of tiny deltas into a huge
     table coalesces aggressively.
+
+    ``pipeline`` is the ingest pipeline width: how many concurrent
+    ``prepare`` workers the pipelined stream service should run.  The pure
+    per-batch aggregation parallelizes perfectly (DESIGN.md §15); the
+    amortized merge (``merge_rows / coalesce`` row-equivalents per batch)
+    is the serialized stage, so by Amdahl the useful width is the
+    parallel:serial work ratio — more workers than that just queue behind
+    the commit lock.  Clamped to the machine's core count; like every
+    other knob here it moves throughput only, never bits.
     """
 
     agg: GroupbyPlan     # per-micro-batch execution plan
     merge_rows: float    # one store merge, in row-equivalents
     coalesce: int        # micro-batches to buffer per store merge
     reason: str          # one line of rationale
+    pipeline: int = 1    # concurrent prepare workers worth running
 
 
 def plan_partial(n: int, num_segments: int, spec: ReproSpec, ncols: int = 1,
@@ -299,13 +310,21 @@ def plan_partial(n: int, num_segments: int, spec: ReproSpec, ncols: int = 1,
     n = max(int(n), 1)
     coalesce = max(1, min(max_coalesce,
                           -(-int(merge_rows) // max(int(merge_frac * n), 1))))
+    # Amdahl width: parallel prepare work per batch over the amortized
+    # serialized merge share.  merge_rows/coalesce row-equivalents of every
+    # n-row batch are serial, so width beyond n·coalesce/merge_rows idles.
+    cores = os.cpu_count() or 1
+    pipeline = int(max(1, min(cores,
+                              n * coalesce // max(int(merge_rows), 1))))
     reason = (f"merge ≈ {merge_rows:.0f} row-equivalents vs {n}-row "
               f"batches; coalesce {coalesce} batch(es) holds merge "
-              f"overhead ≤ {merge_frac:.0%} ({agg.method}/{agg.source})")
+              f"overhead ≤ {merge_frac:.0%}; pipeline width {pipeline} "
+              f"of {cores} core(s) ({agg.method}/{agg.source})")
     obs_trace.event("plan.partial", method=agg.method, chunk=agg.chunk,
                     merge_rows=merge_rows, coalesce=coalesce, n=n,
-                    G=int(num_segments), ncols=int(ncols), reason=reason)
+                    pipeline=pipeline, G=int(num_segments),
+                    ncols=int(ncols), reason=reason)
     obs_metrics.counter("repro_plan_partial_total",
                         method=agg.method).inc()
     return PartialPlan(agg=agg, merge_rows=merge_rows, coalesce=coalesce,
-                       reason=reason)
+                       reason=reason, pipeline=pipeline)

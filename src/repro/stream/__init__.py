@@ -9,9 +9,15 @@ cashes that in for unbounded streams (DESIGN.md §14.3–§14.5):
 * :mod:`repro.stream.window` — :class:`WindowedStore`: tumbling/sliding
   event-time windows as a ring of mergeable partials, out-of-order and
   late arrivals handled by the same exact merge;
-* :mod:`repro.stream.service` — an asyncio NDJSON ingest/query endpoint;
-  concurrent writers serialize onto the commutative merge, so any
-  interleaving yields the bit-identical state.
+* :mod:`repro.stream.sharded` — :class:`ShardedStreamStore`: N independent
+  shard stores (round-robin or key-hash batch assignment) whose query-time
+  ``merge_all`` is bit-identical to a single store, by the same algebra;
+* :mod:`repro.stream.service` — an asyncio NDJSON ingest/query endpoint
+  with pipelined ingest: the pure ``prepare`` stage runs on a thread pool
+  outside the locks, only the tiny ``commit`` serializes (per shard), and
+  backpressure bounds in-flight memory.  Any interleaving of concurrent
+  writers yields the bit-identical state — the lock picks an order, the
+  algebra erases it (DESIGN.md §15).
 
 The headline invariant, checked end-to-end by ``repro.obs.audit`` and
 ``tests/test_stream.py``: the same rows delivered as 1, 7, or 64 permuted
@@ -20,7 +26,11 @@ a store whose table and results fingerprints equal the one-shot
 ``groupby_agg`` over the concatenated rows.
 """
 from repro.stream.store import StreamStore  # noqa: F401
+from repro.stream.sharded import ShardedStreamStore  # noqa: F401
 from repro.stream.window import WindowedStore  # noqa: F401
-from repro.stream.service import StreamService, serve  # noqa: F401
+from repro.stream.service import (  # noqa: F401
+    Backpressure, StreamService, serve,
+)
 
-__all__ = ["StreamStore", "WindowedStore", "StreamService", "serve"]
+__all__ = ["StreamStore", "ShardedStreamStore", "WindowedStore",
+           "StreamService", "Backpressure", "serve"]

@@ -1,13 +1,29 @@
 """Async ingest/query endpoint for the streaming aggregation store.
 
-Concurrency model, in the spirit of :mod:`repro.launch.serve`'s batched
-driver: one event loop multiplexes many writers and readers; store access
-is serialized by an ``asyncio.Lock`` and the blocking jax work runs in the
-loop's default executor, so the protocol stays responsive while a batch
-aggregates.  Serialization is the reproducibility story — every admitted
-batch becomes a partial merged by the exact commutative ``merge``, so *any*
-interleaving of concurrent writers yields the bit-identical store state
-(the lock picks an order; the algebra makes the order irrelevant).
+Concurrency model (DESIGN.md §15): ingest is a two-stage pipeline.
+``prepare`` — the whole aggregation of a micro-batch into a
+:class:`PartialState` — is pure, so the service runs it on a sized
+``ThreadPoolExecutor`` with **no lock held**; many writers aggregate
+concurrently.  Only ``commit`` (append to the coalescing buffer, maybe
+flush-merge) mutates the store, and it runs behind a per-shard
+``asyncio.Lock``.  Reproducibility is unchanged by the concurrency:
+every admitted batch becomes a partial merged by the exact commutative
+``merge``, so *any* interleaving of writers yields the bit-identical
+store state — the lock picks an order, the algebra erases it.
+
+Backpressure: admitted-but-uncommitted batches hold memory, so the
+service meters them against ``inflight_budget`` bytes.  Over budget, a
+new ingest either awaits capacity (``backpressure="wait"``) or fails
+fast with an inline ``Backpressure`` error (``"reject"``) — in both
+cases the batch is admitted exactly once or not at all, never dropped
+or double-counted.  ``query``/``fingerprints``/``snapshot``/``stats``
+drain in-flight prepares and take every shard lock first, so their
+contracts (all acknowledged rows included, consistent counters) are
+exactly the serialized service's.
+
+``pipelined=False`` restores the PR-5 behavior — one global lock around
+whole store calls — and is kept both as the measured baseline in
+``bench_stream.py`` and as the zero-thread fallback.
 
 Wire protocol: newline-delimited JSON (NDJSON) over a plain socket —
 stdlib only, trivially driven from tests and ``examples/``:
@@ -27,52 +43,195 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import contextlib
 import json
 import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
 
 import numpy as np
 
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro.stream.sharded import ShardedStreamStore
 from repro.stream.store import StreamStore
 
-__all__ = ["StreamService", "serve"]
+__all__ = ["Backpressure", "StreamService", "serve"]
+
+#: default in-flight byte budget: plenty for thousands of typical
+#: micro-batches, small enough that a runaway burst can't OOM the host
+DEFAULT_INFLIGHT_BUDGET = 1 << 26  # 64 MiB
+
+
+class Backpressure(RuntimeError):
+    """Raised (and reported inline over the wire) when an ingest is
+    refused because the in-flight queue is over budget."""
 
 
 class StreamService:
-    """Lock-serialized async facade over a :class:`StreamStore` (or any
-    object with ``ingest/query/fingerprints/snapshot``)."""
+    """Pipelined async facade over a :class:`StreamStore` /
+    :class:`ShardedStreamStore` (or any object with the shard interface:
+    ``_prepare_parts`` / ``_commit_part`` / ``num_shards`` plus
+    ``query/fingerprints/snapshot``).
 
-    def __init__(self, store: StreamStore):
+    Args:
+      store: the underlying store.
+      pipelined: run ``prepare`` on an executor outside the locks
+        (default).  ``False`` = PR-5 global-lock behavior.
+      max_workers: prepare-pool size; default asks the store's planner
+        (``pipeline_width`` of the first batch seen).
+      inflight_budget: bytes of admitted-but-uncommitted batches allowed
+        before backpressure engages.
+      backpressure: ``"wait"`` (await capacity; default) or ``"reject"``
+        (fail the over-budget ingest inline).
+    """
+
+    def __init__(self, store, pipelined: bool = True,
+                 max_workers: Optional[int] = None,
+                 inflight_budget: int = DEFAULT_INFLIGHT_BUDGET,
+                 backpressure: str = "wait"):
+        if backpressure not in ("wait", "reject"):
+            raise ValueError(
+                f"backpressure must be 'wait' or 'reject', got "
+                f"{backpressure!r}")
         self.store = store
-        self._lock = asyncio.Lock()
+        self.pipelined = bool(pipelined)
+        self.backpressure = backpressure
+        self._budget = int(inflight_budget)
+        self._max_workers = max_workers
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self._lock = asyncio.Lock()  # serialized mode: the one global lock
+        nshards = getattr(store, "num_shards", 1)
+        self._locks = [asyncio.Lock() for _ in range(nshards)]
+        self._cond = asyncio.Condition()
+        self._inflight = 0
+        self._inflight_bytes = 0
+
+    # -- serialized mode (PR-5): global lock around whole store calls ------
 
     async def _run(self, fn, *args):
         loop = asyncio.get_running_loop()
         async with self._lock:
             return await loop.run_in_executor(None, fn, *args)
 
+    # -- pipelined mode ----------------------------------------------------
+
+    def _pool(self, batch_rows: int) -> ThreadPoolExecutor:
+        """Prepare pool, sized lazily: the planner's pipeline width for the
+        first batch size seen (or the explicit ``max_workers``)."""
+        if self._executor is None:
+            width = self._max_workers or max(
+                self.store.pipeline_width(max(batch_rows, 1)), 1)
+            self._executor = ThreadPoolExecutor(
+                max_workers=width, thread_name_prefix="stream-prepare")
+            obs_metrics.gauge("stream_service_prepare_workers").set(width)
+            obs_trace.event("stream.pool", workers=width)
+        return self._executor
+
+    async def _admit(self, nbytes: int) -> None:
+        """Count a batch into the in-flight queue, applying backpressure.
+        A single over-budget batch is still admitted when the queue is
+        empty (otherwise it could never run); budget only throttles
+        *accumulation*."""
+        async with self._cond:
+            over = (lambda: self._inflight > 0
+                    and self._inflight_bytes + nbytes > self._budget)
+            if over():
+                if self.backpressure == "reject":
+                    obs_metrics.counter(
+                        "stream_service_backpressure_rejects_total").inc()
+                    raise Backpressure(
+                        f"in-flight bytes {self._inflight_bytes} + {nbytes} "
+                        f"exceed budget {self._budget}; retry later")
+                obs_metrics.counter(
+                    "stream_service_backpressure_waits_total").inc()
+                with obs_trace.span("stream.backpressure", bytes=nbytes):
+                    await self._cond.wait_for(lambda: not over())
+            self._inflight += 1
+            self._inflight_bytes += nbytes
+            obs_metrics.gauge("stream_service_inflight").set(self._inflight)
+            obs_metrics.gauge("stream_service_inflight_bytes").set(
+                self._inflight_bytes)
+
+    async def _release(self, nbytes: int) -> None:
+        async with self._cond:
+            self._inflight -= 1
+            self._inflight_bytes -= nbytes
+            obs_metrics.gauge("stream_service_inflight").set(self._inflight)
+            obs_metrics.gauge("stream_service_inflight_bytes").set(
+                self._inflight_bytes)
+            self._cond.notify_all()
+
+    async def _exclusive(self, fn, *args):
+        """Run ``fn`` with the store quiesced: every in-flight prepare
+        committed (drain) and every shard lock held (in index order, so two
+        exclusive ops can't deadlock).  This is how ``query`` / ``snapshot``
+        / ``stats`` keep their serialized-service contracts."""
+        async with self._cond:
+            await self._cond.wait_for(lambda: self._inflight == 0)
+        loop = asyncio.get_running_loop()
+        async with contextlib.AsyncExitStack() as stack:
+            for lock in self._locks:
+                await stack.enter_async_context(lock)
+            return await loop.run_in_executor(None, fn, *args)
+
+    async def _ingest_pipelined(self, values, keys) -> dict:
+        loop = asyncio.get_running_loop()
+        v = np.asarray(values)
+        k = np.asarray(keys)
+        nbytes = int(v.nbytes) + int(k.nbytes)
+        nrows = int(v.shape[0]) if v.ndim else 0
+        await self._admit(nbytes)
+        try:
+            with obs_trace.span("stream.service_ingest", rows=nrows) as sp:
+                parts = await loop.run_in_executor(
+                    self._pool(nrows), self.store._prepare_parts, v, k)
+                out, rows = {}, 0
+                for idx, state, n in parts:
+                    async with self._locks[idx]:
+                        out = await loop.run_in_executor(
+                            None, self.store._commit_part, idx, state, n)
+                    rows += n
+                sp.set(parts=len(parts))
+            out["rows"] = rows
+            return out
+        finally:
+            await self._release(nbytes)
+
+    # -- operations --------------------------------------------------------
+
     async def ingest(self, values, keys) -> dict:
         t0 = time.perf_counter()
-        out = await self._run(self.store.ingest, values, keys)
+        if self.pipelined:
+            out = await self._ingest_pipelined(values, keys)
+        else:
+            out = await self._run(self.store.ingest, values, keys)
         obs_metrics.histogram("stream_service_ingest_seconds").observe(
             time.perf_counter() - t0)
         return out
 
+    async def _guarded(self, fn, *args):
+        return await (self._exclusive(fn, *args) if self.pipelined
+                      else self._run(fn, *args))
+
     async def query(self) -> dict:
-        out = await self._run(self.store.query)
+        out = await self._guarded(self.store.query)
         return {k: np.asarray(v).tolist() for k, v in out.items()}
 
     async def fingerprints(self) -> dict:
-        return await self._run(self.store.fingerprints)
+        return await self._guarded(self.store.fingerprints)
 
     async def snapshot(self, directory: str) -> str:
-        return await self._run(self.store.snapshot, directory)
+        return await self._guarded(self.store.snapshot, directory)
 
     async def stats(self) -> dict:
-        return {"batches": self.store.batches,
-                "merged_batches": self.store.merged_batches,
-                "rows": await self._run(lambda: self.store.rows)}
+        # one closure, run with the store quiesced/locked: the three
+        # counters are read as a consistent set, never mid-commit
+        def read():
+            return {"batches": self.store.batches,
+                    "merged_batches": self.store.merged_batches,
+                    "rows": self.store.rows}
+        return await self._guarded(read)
 
     async def handle(self, req: dict) -> dict:
         op = req.get("op")
@@ -130,22 +289,32 @@ class StreamService:
             except (ConnectionError, OSError):
                 pass
 
+    def close(self) -> None:
+        """Shut down the prepare pool (idempotent)."""
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+
 
 #: per-line stream buffer: NDJSON ingest lines carry whole micro-batches as
 #: text, so the asyncio default of 64 KiB (~1500 rows) is far too small
 LINE_LIMIT = 2 ** 24
 
 
-async def serve(store: StreamStore, host: str = "127.0.0.1",
-                port: int = 0, limit: int = LINE_LIMIT):
+async def serve(store, host: str = "127.0.0.1", port: int = 0,
+                limit: int = LINE_LIMIT, **service_kwargs):
     """Start the NDJSON endpoint; returns the ``asyncio.Server`` (its
-    ``sockets[0].getsockname()`` carries the bound port when ``port=0``)."""
-    service = StreamService(store)
+    ``sockets[0].getsockname()`` carries the bound port when ``port=0``).
+    Extra keyword args configure :class:`StreamService` (``pipelined``,
+    ``max_workers``, ``inflight_budget``, ``backpressure``)."""
+    service = StreamService(store, **service_kwargs)
     server = await asyncio.start_server(service.client, host, port,
                                         limit=limit)
     addr = server.sockets[0].getsockname()
     obs_trace.event("stream.serve", host=addr[0], port=addr[1],
-                    G=store.sig.num_segments)
+                    G=store.sig.num_segments,
+                    pipelined=service.pipelined,
+                    shards=getattr(store, "num_shards", 1))
     return server
 
 
@@ -155,15 +324,32 @@ def main(argv=None):
     ap.add_argument("--aggs", nargs="+", default=["sum"])
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8765)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard count (>1 builds a ShardedStreamStore)")
+    ap.add_argument("--policy", default="round_robin",
+                    choices=["round_robin", "key_hash"])
+    ap.add_argument("--serialized", action="store_true",
+                    help="disable the prepare/commit pipeline (PR-5 mode)")
+    ap.add_argument("--warmup", type=int, default=0, metavar="ROWS",
+                    help="pre-trace the ingest path for this batch size")
     args = ap.parse_args(argv)
 
     async def run():
-        store = StreamStore(args.groups, aggs=tuple(args.aggs))
-        server = await serve(store, args.host, args.port)
+        if args.shards > 1:
+            store = ShardedStreamStore(args.groups, aggs=tuple(args.aggs),
+                                       num_shards=args.shards,
+                                       policy=args.policy)
+        else:
+            store = StreamStore(args.groups, aggs=tuple(args.aggs))
+        if args.warmup:
+            dt = store.warmup(args.warmup)
+            print(f"warmup({args.warmup} rows): {dt:.3f}s")
+        server = await serve(store, args.host, args.port,
+                             pipelined=not args.serialized)
         addr = server.sockets[0].getsockname()
         print(f"stream service on {addr[0]}:{addr[1]} "
-              f"(G={args.groups}, aggs={args.aggs}); NDJSON ops: "
-              f"ingest/query/fingerprints/snapshot/stats")
+              f"(G={args.groups}, aggs={args.aggs}, shards={args.shards}); "
+              f"NDJSON ops: ingest/query/fingerprints/snapshot/stats")
         async with server:
             await server.serve_forever()
 

@@ -40,8 +40,9 @@ from repro.obs import fingerprint as obs_fp
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.ops.partial import (AggSignature, PartialState, empty_partial,
-                               finalize, merge_all, partial_agg)
-from repro.ops.plan import plan_partial
+                               finalize, merge_all, merge_all_jit,
+                               partial_agg, pipeline_for, state_nbytes)
+from repro.ops.plan import PartialPlan, plan_partial
 
 __all__ = ["StreamStore"]
 
@@ -76,16 +77,27 @@ class StreamStore:
         (default) lets :func:`plan_partial` pick from the first batch's
         size; an int pins it.  Throughput knob only — any value yields
         bit-identical query results.
+      compiled: route ``prepare`` through the shared
+        :class:`~repro.ops.partial.PartialPipeline` (cached XLA
+        executables per plan decision) and ``flush`` through the jitted
+        ``merge_all``.  Default on — eager ``partial_agg`` re-traces per
+        call, which dominated measured ingest cost ~10:1.  ``False``
+        restores the fully eager PR-5 paths (one-shot stores, or as the
+        measured baseline in ``bench_stream.py``); either setting yields
+        bit-identical states (pinned by tests and the bench gate).
     """
 
     def __init__(self, num_segments: int, aggs=("sum",),
                  spec: Optional[ReproSpec] = None, method: str = "auto",
                  levels="auto", check_finite: bool = False,
-                 coalesce="auto"):
+                 coalesce="auto", compiled: bool = True):
         self.sig = AggSignature.build(aggs, num_segments, spec)
         self.method = method
-        self.levels = levels
+        self.levels = tuple(levels) if isinstance(levels, list) else levels
         self.check_finite = check_finite
+        self.compiled = bool(compiled)
+        self._pipeline = pipeline_for(
+            self.sig, method, self.levels, check_finite) if compiled else None
         self._coalesce = coalesce
         self._state = empty_partial(num_segments, self.sig.aggs,
                                     self.sig.spec)
@@ -98,56 +110,163 @@ class StreamStore:
 
     # -- ingest ------------------------------------------------------------
 
-    def _coalesce_target(self, n: int) -> int:
-        if self._coalesce != "auto":
-            return max(int(self._coalesce), 1)
+    def _ensure_plan(self, n: int) -> PartialPlan:
         if self._plan is None:
             self._plan = plan_partial(
                 max(n, 1), self.sig.num_segments, self.sig.spec,
                 ncols=max(self.sig.ncols, 1), method=self.method)
-        return self._plan.coalesce
+        return self._plan
 
-    def ingest(self, values, keys) -> dict:
-        """Aggregate one micro-batch (delta table) into the store.
+    def _coalesce_target(self, n: int) -> int:
+        if self._coalesce != "auto":
+            return max(int(self._coalesce), 1)
+        return self._ensure_plan(n).coalesce
 
-        Returns ingest stats ``{rows, batches, pending, merged}``.  Empty
-        deltas are accepted and ignored (a zero-row batch is the merge
-        identity).  Any sequence of ``ingest`` calls that delivers the same
-        multiset of rows leaves the store in the bit-identical state.
-        """
-        t0 = time.perf_counter()
+    def pipeline_width(self, n: int) -> int:
+        """Concurrent ``prepare`` workers worth running for ``n``-row
+        batches (the planner's Amdahl bound; see ``PartialPlan.pipeline``)."""
+        return self._ensure_plan(n).pipeline
+
+    def prepare(self, values, keys) -> Optional[PartialState]:
+        """Stage 1 of ingest: aggregate one micro-batch into a mergeable
+        :class:`PartialState` — **pure**, touches no store state, safe to
+        run on any number of threads concurrently.  Returns ``None`` for an
+        empty batch (the merge identity)."""
         v = np.asarray(values)
         n = int(v.shape[0]) if v.ndim else 0
-        with obs_trace.span("stream.ingest", rows=n) as sp:
-            if n:
+        if not n:
+            return None
+        t0 = time.perf_counter()
+        with obs_trace.span("stream.prepare", rows=n):
+            if self._pipeline is not None:
+                st = self._pipeline(values, keys)
+            else:
                 st = partial_agg(values, keys, self.sig.num_segments,
                                  aggs=self.sig.aggs, spec=self.sig.spec,
                                  method=self.method, levels=self.levels,
                                  check_finite=self.check_finite)
-                self._pending.append(st)
+        obs_metrics.histogram("stream_prepare_seconds").observe(
+            time.perf_counter() - t0)
+        return st
+
+    def commit(self, state: Optional[PartialState], rows: int) -> dict:
+        """Stage 2 of ingest: append a prepared partial to the coalescing
+        buffer and flush when the planner's depth is reached.  This is the
+        only stage that mutates the store — callers running ``prepare``
+        concurrently must serialize ``commit`` (the service's per-store
+        lock).  The serialization order is irrelevant to the result bits:
+        the merge is commutative and associative, so the lock picks an
+        order and the algebra erases it."""
+        t0 = time.perf_counter()
+        n = int(rows)
+        with obs_trace.span("stream.commit", rows=n) as sp:
+            if state is not None:
+                self._pending.append(state)
                 if len(self._pending) >= self._coalesce_target(n):
                     self.flush()
             self.batches += 1
             if self._t_first_ingest is None:
                 self._t_first_ingest = t0
-            dt = time.perf_counter() - t0
             sp.set(pending=len(self._pending))
         obs_metrics.counter("stream_batches_total").inc()
         obs_metrics.counter("stream_rows_total").inc(n)
-        obs_metrics.histogram("stream_ingest_seconds").observe(dt)
+        obs_metrics.histogram("stream_commit_seconds").observe(
+            time.perf_counter() - t0)
         obs_metrics.gauge("stream_pending_partials").set(len(self._pending))
         return {"rows": n, "batches": self.batches,
                 "pending": len(self._pending),
                 "merged": self.merged_batches}
 
+    def ingest(self, values, keys) -> dict:
+        """Aggregate one micro-batch (delta table) into the store.
+
+        ``commit(prepare(values, keys))`` — the serial composition of the
+        two pipeline stages.  Returns ingest stats ``{rows, batches,
+        pending, merged}``.  Empty deltas are accepted and ignored (a
+        zero-row batch is the merge identity).  Any sequence of ``ingest``
+        calls that delivers the same multiset of rows leaves the store in
+        the bit-identical state.
+        """
+        with obs_trace.span("stream.ingest"):
+            st = self.prepare(values, keys)
+            n = int(np.asarray(values).shape[0]) if st is not None else 0
+            return self.commit(st, n)
+
+    # Uniform shard interface (the pipelined service drives stores through
+    # these, so a plain store is the one-shard case of ShardedStreamStore).
+
+    num_shards = 1
+
+    def _prepare_parts(self, values, keys):
+        """``[(shard_index, prepared_state_or_None, rows)]`` — pure."""
+        v = np.asarray(values)
+        n = int(v.shape[0]) if v.ndim else 0
+        return [(0, self.prepare(values, keys), n)]
+
+    def _commit_part(self, idx: int, state: Optional[PartialState],
+                     rows: int) -> dict:
+        assert idx == 0
+        return self.commit(state, rows)
+
     def flush(self) -> None:
         """Merge every buffered partial into the persistent state."""
         if not self._pending:
             return
+        t0 = time.perf_counter()
         with obs_trace.span("stream.merge", pending=len(self._pending)):
-            self._state = merge_all([self._state] + self._pending)
+            states = [self._state] + self._pending
+            self._state = (merge_all_jit(states) if self.compiled
+                           else merge_all(states))
         self.merged_batches += len(self._pending)
         self._pending = []
+        obs_metrics.histogram("stream_merge_seconds").observe(
+            time.perf_counter() - t0)
+
+    @property
+    def pending_bytes(self) -> int:
+        """Host bytes held by not-yet-merged partials.  Bounded by design:
+        the coalescing buffer flushes at the planner's depth, so the
+        unbounded-burst risk lives in the *service's* in-flight queue —
+        which is what its backpressure budget meters (DESIGN.md §15.3)."""
+        return sum(state_nbytes(s) for s in self._pending)
+
+    def warmup(self, batch_rows: int) -> float:
+        """Pre-trace the ingest path for ``batch_rows``-sized batches;
+        returns seconds spent.
+
+        Runs ``prepare`` on a synthetic full-magnitude-spread batch (so the
+        prescan proves the widest level window), one coalescing-depth merge
+        and one ``finalize`` — all into throwaways, so the store's state,
+        counters and fingerprints are untouched.  With
+        ``REPRO_COMPILATION_CACHE`` set (see :mod:`repro.compat`) the XLA
+        executables persist, and a *fresh process* skips compilation too.
+        Batches whose prescan proves a narrower window still pay their own
+        (cheaper) specialization on first sight.
+        """
+        n = max(int(batch_rows), 1)
+        t0 = time.perf_counter()
+        rng = np.random.default_rng(0)
+        nvals = max((int(c) + 1 for a in self.sig.aggs for c in a[1:]),
+                    default=1)
+        # magnitudes span wide but square-safely (var's sq column stays
+        # finite in float32), signs mixed, every group id exercised
+        mag = 10.0 ** rng.uniform(-18.0, 15.0, size=(n, nvals))
+        v = (rng.standard_normal((n, nvals)) * mag).astype(
+            np.dtype(self.sig.spec.dtype))
+        k = (np.arange(n) % self.sig.num_segments).astype(np.int32)
+        st = self.prepare(v, k)
+        if st is not None:
+            depth = self._coalesce_target(n)
+            scratch = empty_partial(self.sig.num_segments, self.sig.aggs,
+                                    self.sig.spec)
+            states = [scratch] + [st] * depth
+            merged = (merge_all_jit(states) if self.compiled
+                      else merge_all(states))
+            finalize(merged)
+        dt = time.perf_counter() - t0
+        obs_trace.event("stream.warmup", rows=n, seconds=dt)
+        obs_metrics.gauge("stream_warmup_seconds").set(dt)
+        return dt
 
     # -- query -------------------------------------------------------------
 
@@ -210,7 +329,7 @@ class StreamStore:
     def restore(cls, directory: str, step: Optional[int] = None,
                 method: str = "auto", levels="auto",
                 check_finite: bool = False, coalesce="auto",
-                verify: bool = True) -> "StreamStore":
+                compiled: bool = True, verify: bool = True) -> "StreamStore":
         """Rebuild a store from a snapshot, bit-exactly.
 
         The signature comes from the manifest (no caller-side schema to get
@@ -228,7 +347,7 @@ class StreamStore:
         sig = AggSignature.from_json(extra["sig"])
         store = cls(sig.num_segments, aggs=sig.aggs, spec=sig.spec,
                     method=method, levels=levels, check_finite=check_finite,
-                    coalesce=coalesce)
+                    coalesce=coalesce, compiled=compiled)
         skeleton = _state_tree(store._state)
         tree, _ = ckpt.restore(directory, skeleton, step=manifest["step"])
         if verify:
