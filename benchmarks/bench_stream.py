@@ -16,6 +16,12 @@ incremental aggregation).  Parts:
   1.5x serialized with 4 writers — runs here, after each path's own
   bitwise gate.
 
+* **durability** — WAL-on vs WAL-off sustained ingest (gated: fsync'd
+  logging within :data:`MAX_WAL_OVERHEAD` of WAL-off), recovery time from
+  the bare log, and bit-verified failover timing
+  (detect -> promote -> first verified query) on a
+  :class:`~repro.stream.ReplicatedStore`.
+
 ``cross_check`` runs FIRST: the streamed state (1, 7 and 64 permuted
 micro-batches, a snapshot/restart mid-stream, the concurrent pipelined
 service, and the sharded store under both policies) must fingerprint
@@ -41,7 +47,8 @@ import numpy as np
 from benchmarks._util import timeit  # noqa: F401  (kept for parity/imports)
 from repro.obs import fingerprint as obs_fp
 from repro.ops import groupby_agg
-from repro.stream import ShardedStreamStore, StreamStore, serve
+from repro.stream import (ReplicatedStore, ShardedStreamStore, StreamStore,
+                          WriteAheadLog, serve)
 from repro.stream.service import LINE_LIMIT
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
@@ -343,13 +350,113 @@ def run_sustained(quick: bool = True, writers: int = 4) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# durability: WAL overhead and bit-verified failover time
+# ---------------------------------------------------------------------------
+
+#: acceptance gate (ISSUE 10): fsync'd write-ahead logging may cost at most
+#: this factor of sustained direct-ingest throughput
+MAX_WAL_OVERHEAD = 1.5
+
+
+def run_durability(quick: bool = True) -> dict:
+    """WAL-on vs WAL-off sustained ingest, recovery, and failover timing.
+
+    Every timed configuration is gated on bits: the WAL-on store, the
+    store recovered from its log, and the promoted post-failover replica
+    must all fingerprint identically to the WAL-off run.
+    """
+    n = 2**17 if quick else 2**20
+    batch = 2048 if quick else 8192
+    v, k = _dataset(n, seed=7)
+    want = _want(v, k)
+    out = {"rows": n, "batch_rows": batch}
+
+    def timed_ingest(store) -> float:
+        t0 = time.perf_counter()
+        for lo in range(0, n, batch):
+            store.ingest(v[lo:lo + batch], k[lo:lo + batch])
+        store.query()
+        return n / (time.perf_counter() - t0)
+
+    # warm the compile caches so the WAL-off baseline isn't billed for XLA
+    warm = StreamStore(G, aggs=AGGS)
+    warm.ingest(v[:batch], k[:batch])
+    warm.query()
+
+    out["wal_off_rows_per_s"] = timed_ingest(StreamStore(G, aggs=AGGS))
+
+    with tempfile.TemporaryDirectory() as d:
+        for policy in ("always", "never"):
+            path = os.path.join(d, f"bench-{policy}.wal")
+            probe = StreamStore(G, aggs=AGGS)
+            wal = WriteAheadLog(path, sig=probe.sig, fsync=policy)
+            store = StreamStore(G, aggs=AGGS, wal=wal)
+            out[f"wal_{policy}_rows_per_s"] = timed_ingest(store)
+            assert store.fingerprints() == want, f"wal({policy}) != one-shot"
+            wal.close()
+            if policy == "always":
+                # recovery gate + timing: rebuild from the log alone
+                t0 = time.perf_counter()
+                rec = StreamStore.recover(path)
+                out["recover_s"] = time.perf_counter() - t0
+                assert rec.fingerprints() == want, "recovered != one-shot"
+                rec.wal.close()
+
+        out["wal_overhead_x"] = (out["wal_off_rows_per_s"] /
+                                 out["wal_always_rows_per_s"])
+
+        # failover: half the rows in, snapshot + replicate, primary dies,
+        # bit-verified promotion, remaining rows land on the new primary
+        rep = ReplicatedStore(G, aggs=AGGS,
+                              wal_path=os.path.join(d, "rep.wal"),
+                              snapshot_dir=os.path.join(d, "snaps"))
+        half = n // 2
+        tail = half - 4 * batch        # batches the follower hasn't seen
+        for lo in range(0, tail, batch):
+            rep.ingest(v[lo:lo + batch], k[lo:lo + batch])
+        rep.snapshot()
+        rep.replicate()
+        for lo in range(tail, half, batch):
+            rep.ingest(v[lo:lo + batch], k[lo:lo + batch])
+        rep.crash_primary()
+        report = rep.promote()
+        out["failover"] = report["seconds"]
+        out["failover"]["caught_up_records"] = report["caught_up_records"]
+        for lo in range(half, n, batch):
+            rep.ingest(v[lo:lo + batch], k[lo:lo + batch])
+        assert rep.fingerprints() == want, "post-failover != one-shot"
+        rep.primary.wal.close()
+
+    print(f"\n== durability (n={n}, batch={batch}) ==")
+    print(f"  WAL off              {out['wal_off_rows_per_s']:12,.0f} rows/s")
+    print(f"  WAL fsync=always     "
+          f"{out['wal_always_rows_per_s']:12,.0f} rows/s")
+    print(f"  WAL fsync=never      "
+          f"{out['wal_never_rows_per_s']:12,.0f} rows/s")
+    print(f"  overhead (always):   {out['wal_overhead_x']:.2f}x  "
+          f"[gate {MAX_WAL_OVERHEAD}x]")
+    print(f"  recover from log:    {out['recover_s'] * 1e3:9.1f} ms")
+    fo = out["failover"]
+    print(f"  failover: detect->promoted {fo['detect_to_promoted'] * 1e3:.1f}"
+          f" ms (promote {fo['promote'] * 1e3:.1f} ms, first verified query "
+          f"{fo['first_query'] * 1e3:.1f} ms, "
+          f"{fo['caught_up_records']} records caught up)")
+    assert out["wal_overhead_x"] <= MAX_WAL_OVERHEAD, (
+        f"WAL-on ingest is {out['wal_overhead_x']:.2f}x slower than "
+        f"WAL-off (gate: {MAX_WAL_OVERHEAD}x)")
+    return out
+
+
 def emit_bench_json(quick: bool = True):
     check = cross_check()                  # the gate: fail before timing
     ttfr = run_ttfr(quick=quick)
     sustained = run_sustained(quick=quick)
+    durability = run_durability(quick=quick)
     payload = {"cross_check": check, "G": G,
                "aggs": [a if isinstance(a, str) else list(a) for a in AGGS],
-               "ttfr": ttfr, "sustained": sustained}
+               "ttfr": ttfr, "sustained": sustained,
+               "durability": durability}
     with open(BENCH_JSON, "w") as fh:
         json.dump(payload, fh, indent=1)
     print("wrote", os.path.abspath(BENCH_JSON))

@@ -9,8 +9,14 @@ tests/test_integration.py).
 Layout:
   <dir>/step_<n>/manifest.json
   <dir>/step_<n>/arrays.npz
-Atomicity: written into ``.tmp-step_<n>`` and os.rename'd; readers only ever
-see complete checkpoints.  A SHA-256 of the npz is stored in the manifest.
+Atomicity: written into ``.tmp-step_<n>``, fsynced (files and directory),
+then os.rename'd; readers only ever see complete checkpoints — a crash
+mid-snapshot leaves at most a ``.tmp-`` directory that no reader looks at
+and the next save clears, never a manifest describing partial arrays.
+A SHA-256 of the npz is stored in the manifest.  The
+``repro.runtime.faultinject`` sites ``ckpt.save`` (before the publishing
+rename) and ``ckpt.saved`` (after it) let the chaos harness prove both
+properties under injected crashes and silent corruption.
 """
 from __future__ import annotations
 
@@ -28,8 +34,28 @@ import numpy as np
 from repro.obs import fingerprint as obs_fp
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro.runtime import faultinject
 
 SEP = "/"
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:                  # platform without directory fds
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree, prefix=""):
@@ -71,7 +97,13 @@ def save(directory: str, step: int, tree, extra: Optional[dict] = None,
         flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
         final = os.path.join(directory, f"step_{step:08d}")
         tmp = os.path.join(directory, f".tmp-step_{step:08d}")
-        os.makedirs(tmp, exist_ok=True)
+        old = os.path.join(directory, f".old-step_{step:08d}")
+        # leftovers from a crashed earlier save must not leak stale files
+        # into this snapshot (or shadow it)
+        for stale in (tmp, old):
+            if os.path.exists(stale):
+                shutil.rmtree(stale)
+        os.makedirs(tmp)
         npz_path = os.path.join(tmp, "arrays.npz")
         np.savez(npz_path, **flat)
         with open(npz_path, "rb") as f:
@@ -88,9 +120,21 @@ def save(directory: str, step: int, tree, extra: Optional[dict] = None,
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_file(npz_path)
+        _fsync_dir(tmp)
+        faultinject.fire("ckpt.save", path=npz_path)   # crash-mid-snapshot
+        # publish: never a window where neither the old nor the new
+        # complete checkpoint exists under the final name
         if os.path.exists(final):
-            shutil.rmtree(final)
+            os.rename(final, old)
         os.rename(tmp, final)
+        _fsync_dir(directory)
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        faultinject.fire("ckpt.saved",
+                         path=os.path.join(final, "arrays.npz"))
         _gc(directory, keep)
         nbytes = os.path.getsize(npz_path.replace(tmp, final))
         sp.set(bytes=nbytes, fingerprint=tree_fp)

@@ -17,13 +17,34 @@ log = logging.getLogger(__name__)
 
 
 class SimulatedFailure(RuntimeError):
-    """Raised by fault-injection hooks in tests."""
+    """Raised by fault-injection hooks in tests.
+
+    The general-purpose scheduled/seeded injector lives in
+    :mod:`repro.runtime.faultinject`; its :class:`InjectedCrash` subclasses
+    this, so supervisor-style recovery loops handle both."""
+
+
+def exponential_backoff(base_s: float, attempt: int,
+                        cap_s: float = 30.0, factor: float = 2.0) -> float:
+    """Deterministic capped exponential backoff delay, in seconds.
+
+    ``min(cap_s, base_s * factor**attempt)`` with ``attempt`` 0-based —
+    a pure function of its arguments (no jitter), so retry schedules are
+    part of the reproducible-run contract rather than a hidden source of
+    timing randomness.  ``base_s <= 0`` disables backoff entirely.
+    Shared by :func:`run_supervised` and the stream service's ingest
+    retry path (:class:`repro.stream.StreamService`).
+    """
+    if base_s <= 0.0:
+        return 0.0
+    return float(min(cap_s, base_s * factor ** max(attempt, 0)))
 
 
 @dataclasses.dataclass
 class SupervisorConfig:
     max_restarts: int = 10
-    backoff_s: float = 0.0         # real clusters: exponential backoff
+    backoff_s: float = 0.0         # base delay; doubles per consecutive
+    backoff_cap_s: float = 30.0    # restart up to this cap
 
 
 @dataclasses.dataclass
@@ -70,5 +91,7 @@ def run_supervised(make_state: Callable[[], object],
                         step, e, restarts)
             if restarts > cfg.max_restarts:
                 raise
-            if cfg.backoff_s:
-                time.sleep(cfg.backoff_s)
+            delay = exponential_backoff(cfg.backoff_s, restarts - 1,
+                                        cfg.backoff_cap_s)
+            if delay:
+                time.sleep(delay)

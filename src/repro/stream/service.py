@@ -28,7 +28,8 @@ whole store calls — and is kept both as the measured baseline in
 Wire protocol: newline-delimited JSON (NDJSON) over a plain socket —
 stdlib only, trivially driven from tests and ``examples/``:
 
-  -> {"op": "ingest", "values": [[...], ...], "keys": [...]}
+  -> {"op": "ingest", "values": [[...], ...], "keys": [...],
+      "client": "c0", "seq": 7}        # client/seq optional: exactly-once
   -> {"op": "query"}
   -> {"op": "fingerprints"}
   -> {"op": "snapshot", "directory": "..."}
@@ -45,6 +46,7 @@ import argparse
 import asyncio
 import contextlib
 import json
+import os
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
@@ -53,8 +55,10 @@ import numpy as np
 
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro.runtime.failures import exponential_backoff
 from repro.stream.sharded import ShardedStreamStore
-from repro.stream.store import StreamStore
+from repro.stream.store import StreamStore, _delivery_meta
+from repro.stream.wal import WalUnavailable
 
 __all__ = ["Backpressure", "StreamService", "serve"]
 
@@ -84,12 +88,26 @@ class StreamService:
         before backpressure engages.
       backpressure: ``"wait"`` (await capacity; default) or ``"reject"``
         (fail the over-budget ingest inline).
+      max_retries: how many times an ingest refused by ``"reject"``
+        backpressure is retried in-service before the refusal reaches the
+        client.  Delays come from
+        :func:`repro.runtime.failures.exponential_backoff` — deterministic
+        (no jitter), so retry schedules are reproducible.
+      retry_backoff_s: the backoff base delay (0 disables sleeping).
+      request_timeout: per-request deadline in seconds.  A request that
+        misses it is answered ``{"ok": false, "timeout": true}`` while the
+        underlying operation *runs to completion in the background* —
+        cancelling a half-done commit could tear a batch, and completion
+        keeps the exactly-once story simple: a client that saw a timeout
+        retries with the same ``(client, seq)`` tag and is deduplicated.
     """
 
     def __init__(self, store, pipelined: bool = True,
                  max_workers: Optional[int] = None,
                  inflight_budget: int = DEFAULT_INFLIGHT_BUDGET,
-                 backpressure: str = "wait"):
+                 backpressure: str = "wait", max_retries: int = 0,
+                 retry_backoff_s: float = 0.05,
+                 request_timeout: Optional[float] = None):
         if backpressure not in ("wait", "reject"):
             raise ValueError(
                 f"backpressure must be 'wait' or 'reject', got "
@@ -97,6 +115,9 @@ class StreamService:
         self.store = store
         self.pipelined = bool(pipelined)
         self.backpressure = backpressure
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.request_timeout = request_timeout
         self._budget = int(inflight_budget)
         self._max_workers = max_workers
         self._executor: Optional[ThreadPoolExecutor] = None
@@ -175,7 +196,7 @@ class StreamService:
                 await stack.enter_async_context(lock)
             return await loop.run_in_executor(None, fn, *args)
 
-    async def _ingest_pipelined(self, values, keys) -> dict:
+    async def _ingest_pipelined(self, values, keys, meta=None) -> dict:
         loop = asyncio.get_running_loop()
         v = np.asarray(values)
         k = np.asarray(keys)
@@ -186,6 +207,17 @@ class StreamService:
             with obs_trace.span("stream.service_ingest", rows=nrows) as sp:
                 parts = await loop.run_in_executor(
                     self._pool(nrows), self.store._prepare_parts, v, k)
+                # the write-ahead step: one record for the whole batch,
+                # before any shard lock is taken (WAL appends serialize on
+                # the log's own lock; the fsync happens off the event loop)
+                if meta is not None or \
+                        getattr(self.store, "wal", None) is not None:
+                    fresh = await loop.run_in_executor(
+                        None, self.store._log_parts, parts, meta)
+                    if not fresh:
+                        obs_metrics.counter(
+                            "stream_duplicate_deliveries_total").inc()
+                        return {"rows": 0, "duplicate": True}
                 out, rows = {}, 0
                 for idx, state, n in parts:
                     async with self._locks[idx]:
@@ -200,12 +232,38 @@ class StreamService:
 
     # -- operations --------------------------------------------------------
 
-    async def ingest(self, values, keys) -> dict:
-        t0 = time.perf_counter()
+    async def _ingest_once(self, values, keys, meta) -> dict:
         if self.pipelined:
-            out = await self._ingest_pipelined(values, keys)
-        else:
-            out = await self._run(self.store.ingest, values, keys)
+            return await self._ingest_pipelined(values, keys, meta)
+        if meta is not None:
+            return await self._run(
+                lambda: self.store.ingest(values, keys,
+                                          client=meta["client"],
+                                          seq=meta["cseq"]))
+        return await self._run(self.store.ingest, values, keys)
+
+    async def ingest(self, values, keys, client=None, seq=None) -> dict:
+        t0 = time.perf_counter()
+        meta = _delivery_meta(client, seq)
+        dedup = getattr(self.store, "dedup", None)
+        if meta is not None and dedup is not None and \
+                dedup.seen(meta["client"], meta["cseq"]):
+            obs_metrics.counter("stream_duplicate_deliveries_total").inc()
+            return {"rows": 0, "duplicate": True}
+        attempt = 0
+        while True:
+            try:
+                out = await self._ingest_once(values, keys, meta)
+                break
+            except Backpressure:
+                if attempt >= self.max_retries:
+                    raise
+                delay = exponential_backoff(self.retry_backoff_s, attempt)
+                attempt += 1
+                obs_metrics.counter(
+                    "stream_service_ingest_retries_total").inc()
+                if delay:
+                    await asyncio.sleep(delay)
         obs_metrics.histogram("stream_service_ingest_seconds").observe(
             time.perf_counter() - t0)
         return out
@@ -230,28 +288,59 @@ class StreamService:
         def read():
             return {"batches": self.store.batches,
                     "merged_batches": self.store.merged_batches,
-                    "rows": self.store.rows}
+                    "rows": self.store.rows,
+                    "read_only": bool(getattr(self.store, "read_only",
+                                              False)),
+                    "wal_seq": int(getattr(self.store, "wal_seq", 0))}
         return await self._guarded(read)
 
-    async def handle(self, req: dict) -> dict:
-        op = req.get("op")
+    async def _with_deadline(self, coro):
+        """Apply the per-request deadline.  The operation is shielded and
+        left to finish in the background on timeout (see the class
+        docstring for why cancellation would be worse)."""
+        if self.request_timeout is None:
+            return await coro
+        task = asyncio.ensure_future(coro)
         try:
-            if op == "ingest":
-                values = np.asarray(req["values"],
-                                    self.store.sig.spec.dtype)
-                keys = np.asarray(req["keys"], np.int32)
-                return {"ok": True, **(await self.ingest(values, keys))}
-            if op == "query":
-                return {"ok": True, "results": await self.query()}
-            if op == "fingerprints":
-                return {"ok": True,
-                        "fingerprints": await self.fingerprints()}
-            if op == "snapshot":
-                return {"ok": True,
-                        "path": await self.snapshot(req["directory"])}
-            if op == "stats":
-                return {"ok": True, **(await self.stats())}
-            return {"ok": False, "error": f"unknown op {op!r}"}
+            return await asyncio.wait_for(asyncio.shield(task),
+                                          self.request_timeout)
+        except asyncio.TimeoutError:
+            task.add_done_callback(lambda t: t.cancelled() or t.exception())
+            raise
+
+    async def _dispatch(self, req: dict) -> dict:
+        op = req.get("op")
+        if op == "ingest":
+            values = np.asarray(req["values"], self.store.sig.spec.dtype)
+            keys = np.asarray(req["keys"], np.int32)
+            return {"ok": True,
+                    **(await self.ingest(values, keys,
+                                         client=req.get("client"),
+                                         seq=req.get("seq")))}
+        if op == "query":
+            return {"ok": True, "results": await self.query()}
+        if op == "fingerprints":
+            return {"ok": True, "fingerprints": await self.fingerprints()}
+        if op == "snapshot":
+            return {"ok": True,
+                    "path": await self.snapshot(req["directory"])}
+        if op == "stats":
+            return {"ok": True, **(await self.stats())}
+        return {"ok": False, "error": f"unknown op {op!r}"}
+
+    async def handle(self, req: dict) -> dict:
+        try:
+            return await self._with_deadline(self._dispatch(req))
+        except asyncio.TimeoutError:
+            obs_metrics.counter("stream_service_timeouts_total").inc()
+            return {"ok": False, "timeout": True,
+                    "error": f"deadline ({self.request_timeout}s) "
+                             "exceeded; operation completes in background "
+                             "— retry with the same (client, seq) tag"}
+        except WalUnavailable as e:
+            obs_metrics.counter("stream_service_errors_total").inc()
+            return {"ok": False, "read_only": True,
+                    "error": f"{type(e).__name__}: {e}"}
         except Exception as e:  # protocol boundary: report, don't die
             obs_metrics.counter("stream_service_errors_total").inc()
             return {"ok": False, "error": f"{type(e).__name__}: {e}"}
@@ -330,17 +419,36 @@ def main(argv=None):
                     choices=["round_robin", "key_hash"])
     ap.add_argument("--serialized", action="store_true",
                     help="disable the prepare/commit pipeline (PR-5 mode)")
+    ap.add_argument("--wal", default=None, metavar="PATH",
+                    help="write-ahead log file (durable ingest; an "
+                         "existing log is recovered and resumed)")
+    ap.add_argument("--snapshots", default=None, metavar="DIR",
+                    help="snapshot directory consulted on recovery")
     ap.add_argument("--warmup", type=int, default=0, metavar="ROWS",
                     help="pre-trace the ingest path for this batch size")
     args = ap.parse_args(argv)
 
     async def run():
+        resume = args.wal is not None and os.path.exists(args.wal)
         if args.shards > 1:
-            store = ShardedStreamStore(args.groups, aggs=tuple(args.aggs),
-                                       num_shards=args.shards,
-                                       policy=args.policy)
+            if resume:
+                store = ShardedStreamStore.recover(
+                    args.wal, args.snapshots, num_shards=args.shards,
+                    policy=args.policy)
+            else:
+                store = ShardedStreamStore(args.groups,
+                                           aggs=tuple(args.aggs),
+                                           num_shards=args.shards,
+                                           policy=args.policy, wal=args.wal)
         else:
-            store = StreamStore(args.groups, aggs=tuple(args.aggs))
+            if resume:
+                store = StreamStore.recover(args.wal, args.snapshots)
+            else:
+                store = StreamStore(args.groups, aggs=tuple(args.aggs),
+                                    wal=args.wal)
+        if resume:
+            print(f"recovered from {args.wal}: wal_seq={store.wal_seq}, "
+                  f"rows={store.rows}")
         if args.warmup:
             dt = store.warmup(args.warmup)
             print(f"warmup({args.warmup} rows): {dt:.3f}s")

@@ -42,7 +42,10 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.ops.partial import (AggSignature, PartialState, finalize,
                                merge_all, merge_all_jit)
-from repro.stream.store import StreamStore, _state_tree, _tree_state
+from repro.stream.store import (StreamStore, _DurableMixin, _delivery_meta,
+                                _restore_best_snapshot, _state_tree,
+                                _tree_state)
+from repro.stream.wal import WriteAheadLog
 
 __all__ = ["ShardedStreamStore"]
 
@@ -56,7 +59,7 @@ _HASH_SHIFT = np.uint64(33)
 _POLICIES = ("round_robin", "key_hash")
 
 
-class ShardedStreamStore:
+class ShardedStreamStore(_DurableMixin):
     """N independent shard stores presenting the one-store interface.
 
     Args:
@@ -67,13 +70,19 @@ class ShardedStreamStore:
         state is bit-identical for any value (pinned by tests).
       policy: ``"round_robin"`` (whole batches cycle shards) or
         ``"key_hash"`` (rows split by group-key hash).
+      wal: as in :class:`StreamStore` — one log for the whole sharded
+        store, not one per shard.  A batch that splits across shards is
+        logged as *one* record (all parts, with their shard indices), so
+        the log is atomic per batch and a replay onto any other shard
+        count is just another legal partition of the row multiset.
     """
 
     def __init__(self, num_segments: int, aggs=("sum",),
                  spec: Optional[ReproSpec] = None, method: str = "auto",
                  levels="auto", check_finite: bool = False,
                  coalesce="auto", compiled: bool = True,
-                 num_shards: int = 2, policy: str = "round_robin"):
+                 num_shards: int = 2, policy: str = "round_robin",
+                 wal=None):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         if policy not in _POLICIES:
@@ -90,6 +99,7 @@ class ShardedStreamStore:
         # itertools.count is GIL-atomic, so round-robin assignment needs no
         # lock even when many service workers prepare concurrently.
         self._rr = itertools.count()
+        self._init_durability(wal)
 
     # -- assignment --------------------------------------------------------
 
@@ -125,12 +135,31 @@ class ShardedStreamStore:
                      rows: int) -> dict:
         return self._shards[idx].commit(state, rows)
 
-    def ingest(self, values, keys) -> dict:
+    def ingest(self, values, keys, client=None, seq=None) -> dict:
         """Aggregate one micro-batch across the shards (serial composition
-        of the two pipeline stages, like :meth:`StreamStore.ingest`)."""
+        of the two pipeline stages, like :meth:`StreamStore.ingest`), with
+        one write-ahead record covering every part when a WAL is attached.
+        ``client``/``seq`` tag the delivery for exactly-once commit."""
+        meta = _delivery_meta(client, seq)
+        if meta is not None and self.dedup.seen(meta["client"],
+                                                meta["cseq"]):
+            obs_metrics.counter("stream_duplicate_deliveries_total").inc()
+            return {"rows": 0, "duplicate": True, "batches": self.batches,
+                    "pending": sum(len(s._pending) for s in self._shards),
+                    "merged": self.merged_batches}
+        self._check_writable()
         with obs_trace.span("stream.ingest", shards=self.num_shards):
+            parts = self._prepare_parts(values, keys)
+            if not self._log_parts(parts, meta):
+                obs_metrics.counter(
+                    "stream_duplicate_deliveries_total").inc()
+                return {"rows": 0, "duplicate": True,
+                        "batches": self.batches,
+                        "pending": sum(len(s._pending)
+                                       for s in self._shards),
+                        "merged": self.merged_batches}
             rows = 0
-            for idx, state, n in self._prepare_parts(values, keys):
+            for idx, state, n in parts:
                 self._commit_part(idx, state, n)
                 rows += n
         return {"rows": rows, "batches": self.batches,
@@ -214,6 +243,7 @@ class ShardedStreamStore:
                  "batches": self.batches,
                  "num_shards": self.num_shards,
                  "policy": self.policy,
+                 "wal_seq": self.wal_seq,
                  "fingerprints": self.fingerprints()}
         path = ckpt.save(directory, step, _state_tree(st), extra=extra,
                          keep=keep)
@@ -248,5 +278,40 @@ class ShardedStreamStore:
         shard0._state = _tree_state(tree, sig)
         shard0.batches = int(extra.get("batches", 0))
         shard0.merged_batches = shard0.batches
+        store.wal_seq = int(extra.get("wal_seq", 0))
         obs_metrics.counter("stream_restores_total").inc()
+        return store
+
+    @classmethod
+    def recover(cls, wal, snapshot_dir: Optional[str] = None,
+                method: str = "auto", levels="auto",
+                check_finite: bool = False, coalesce="auto",
+                compiled: bool = True, num_shards: int = 2,
+                policy: str = "round_robin") -> "ShardedStreamStore":
+        """Rebuild from (newest verifiable snapshot + WAL replay), exactly
+        as :meth:`StreamStore.recover` — the shard count and policy may
+        differ from the crashed store's, because both the snapshot layout
+        and the per-record shard indices (applied modulo the live shard
+        count) are just partitions the merge algebra erases."""
+        if not isinstance(wal, WriteAheadLog):
+            wal = WriteAheadLog(wal)
+        with obs_trace.span("stream.recover", wal_last_seq=wal.last_seq,
+                            shards=num_shards):
+            store = None
+            if snapshot_dir is not None:
+                store = _restore_best_snapshot(
+                    cls, snapshot_dir, wal.sig,
+                    dict(method=method, levels=levels,
+                         check_finite=check_finite, coalesce=coalesce,
+                         compiled=compiled, num_shards=num_shards,
+                         policy=policy))
+            if store is None:
+                store = cls(wal.sig.num_segments, aggs=wal.sig.aggs,
+                            spec=wal.sig.spec, method=method, levels=levels,
+                            check_finite=check_finite, coalesce=coalesce,
+                            compiled=compiled, num_shards=num_shards,
+                            policy=policy)
+            store._replay(wal, from_seq=store.wal_seq)
+            store._attach_wal(wal)
+        obs_metrics.counter("stream_recoveries_total").inc()
         return store

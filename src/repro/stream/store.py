@@ -43,8 +43,125 @@ from repro.ops.partial import (AggSignature, PartialState, empty_partial,
                                finalize, merge_all, merge_all_jit,
                                partial_agg, pipeline_for, state_nbytes)
 from repro.ops.plan import PartialPlan, plan_partial
+from repro.runtime import faultinject
+from repro.stream.wal import (DedupIndex, WalUnavailable, WriteAheadLog,
+                              pack_parts, unpack_parts)
 
 __all__ = ["StreamStore"]
+
+
+def _delivery_meta(client, seq) -> Optional[dict]:
+    if client is None or seq is None:
+        return None
+    return {"client": str(client), "cseq": int(seq)}
+
+
+class _DurableMixin:
+    """WAL logging + exactly-once delivery shared by the flat and sharded
+    stores (DESIGN.md §16).  The owning class provides ``sig``,
+    ``num_shards`` and the ``_commit_part`` shard interface; this mixin
+    provides the write-ahead step, the read-only degradation latch and
+    the replay application helper."""
+
+    _wal_kind = "stream"
+
+    def _wal_params(self) -> dict:
+        return {}
+
+    def _init_durability(self, wal) -> None:
+        if wal is not None and not isinstance(wal, WriteAheadLog):
+            wal = WriteAheadLog(wal, sig=self.sig, kind=self._wal_kind,
+                                params=self._wal_params())
+        if wal is not None:
+            if wal.sig != self.sig:
+                raise ValueError("WAL belongs to a different store "
+                                 "signature")
+            if wal.last_seq > 0:
+                raise ValueError(
+                    f"WAL {wal.path} already holds {wal.last_seq} records; "
+                    "rebuild the store with recover() instead of attaching "
+                    "a non-empty log to a fresh one")
+        self._wal: Optional[WriteAheadLog] = wal
+        self.wal_seq = 0 if wal is None else wal.last_seq
+        self.dedup = DedupIndex()
+        self.read_only = False
+
+    @property
+    def wal(self) -> Optional[WriteAheadLog]:
+        return self._wal
+
+    def _check_writable(self) -> None:
+        if self.read_only:
+            raise WalUnavailable(
+                "store is serving read-only: its WAL became unavailable "
+                "and unlogged ingest would be lost on the next crash")
+
+    def _log_record(self, arrays, kind: str, rec_meta: dict,
+                    meta: Optional[dict]) -> bool:
+        """The write-ahead step: reserve the delivery tag (False — a
+        duplicate, don't log or apply anything), then append one record if
+        there is anything to log and a WAL is attached.  Must run before
+        the batch is applied.  On storage failure the store latches
+        read-only and raises :class:`WalUnavailable` — the batch was
+        neither logged nor applied (the failed tag reservation is moot:
+        every later ingest is refused, and recovery rebuilds the index
+        from the log, which does not hold the failed record)."""
+        self._check_writable()
+        if meta is not None and \
+                not self.dedup.reserve(meta["client"], meta["cseq"]):
+            return False
+        if self._wal is not None and arrays:
+            try:
+                self.wal_seq = self._wal.append(arrays, kind=kind,
+                                                meta=rec_meta)
+            except (WalUnavailable, OSError) as e:
+                self.read_only = True
+                obs_metrics.counter("stream_wal_degraded_total").inc()
+                obs_trace.event("stream.wal_degraded", error=str(e))
+                if isinstance(e, WalUnavailable):
+                    raise
+                raise WalUnavailable(str(e)) from e
+        return True
+
+    def _log_parts(self, parts, meta: Optional[dict] = None) -> bool:
+        """One ``"parts"`` record covering *every* prepared part of a batch
+        (atomic in the log, however many shards the batch split into).
+        False when the delivery tag turned out to be a duplicate."""
+        states = [s for _, s, _ in parts if s is not None]
+        rec_meta = dict(meta or {})
+        rec_meta["shards"] = [int(i) for i, s, _ in parts if s is not None]
+        return self._log_record(pack_parts(states) if states else {},
+                                "parts", rec_meta, meta)
+
+    def _apply_record(self, rec) -> None:
+        """Replay one WAL record into the store, without re-logging it."""
+        if rec.kind != "parts":
+            raise ValueError(f"cannot replay record kind {rec.kind!r} "
+                             "into a stream store")
+        shards = rec.meta.get("shards") or [0]
+        parts = unpack_parts(rec.arrays, self.sig)
+        for orig_idx, st in zip(shards, parts):
+            self._commit_part(int(orig_idx) % self.num_shards, st,
+                              int(np.asarray(st.rows)))
+
+    def _replay(self, wal: WriteAheadLog, from_seq: int) -> int:
+        """Apply every record with ``seq > from_seq``; absorb *every*
+        record's delivery tag (duplicate suppression must cover retries of
+        batches that are already inside the snapshot).  Replay never
+        appends, so running it twice is idempotent by the seq cut."""
+        applied = 0
+        with obs_trace.span("stream.wal_replay", from_seq=from_seq):
+            for rec in wal.records():
+                self.dedup.absorb_meta(rec.meta)
+                if rec.seq > from_seq:
+                    self._apply_record(rec)
+                    applied += 1
+        obs_metrics.counter("stream_wal_replayed_records_total").inc(applied)
+        return applied
+
+    def _attach_wal(self, wal: WriteAheadLog) -> None:
+        self._wal = wal
+        self.wal_seq = wal.last_seq
 
 
 def _state_tree(state: PartialState) -> dict:
@@ -64,7 +181,7 @@ def _tree_state(tree: dict, sig: AggSignature) -> PartialState:
                         rows=tree["rows"], sig=sig)
 
 
-class StreamStore:
+class StreamStore(_DurableMixin):
     """Incrementally aggregated GROUPBY state over an unbounded row stream.
 
     Args:
@@ -85,12 +202,20 @@ class StreamStore:
         restores the fully eager PR-5 paths (one-shot stores, or as the
         measured baseline in ``bench_stream.py``); either setting yields
         bit-identical states (pinned by tests and the bench gate).
+      wal: a :class:`~repro.stream.wal.WriteAheadLog` (or a path to
+        create/open one) that every ingested delta is appended to *before*
+        it is applied.  With a WAL, ``recover(wal, snapshot_dir)`` rebuilds
+        the store bit-exactly from (snapshot + replayed deltas) after a
+        crash, and client-tagged deliveries (``ingest(..., client=...,
+        seq=...)``) commit exactly once across crashes.  An attached log
+        must be empty — a non-empty one means there is durable state to
+        rebuild first, which is :meth:`recover`'s job.
     """
 
     def __init__(self, num_segments: int, aggs=("sum",),
                  spec: Optional[ReproSpec] = None, method: str = "auto",
                  levels="auto", check_finite: bool = False,
-                 coalesce="auto", compiled: bool = True):
+                 coalesce="auto", compiled: bool = True, wal=None):
         self.sig = AggSignature.build(aggs, num_segments, spec)
         self.method = method
         self.levels = tuple(levels) if isinstance(levels, list) else levels
@@ -107,6 +232,7 @@ class StreamStore:
         self.merged_batches = 0
         self._t_first_ingest: Optional[float] = None
         self._t_first_result: Optional[float] = None
+        self._init_durability(wal)
 
     # -- ingest ------------------------------------------------------------
 
@@ -157,6 +283,8 @@ class StreamStore:
         lock).  The serialization order is irrelevant to the result bits:
         the merge is commutative and associative, so the lock picks an
         order and the algebra erases it."""
+        self._check_writable()
+        faultinject.fire("store.commit")
         t0 = time.perf_counter()
         n = int(rows)
         with obs_trace.span("stream.commit", rows=n) as sp:
@@ -177,19 +305,39 @@ class StreamStore:
                 "pending": len(self._pending),
                 "merged": self.merged_batches}
 
-    def ingest(self, values, keys) -> dict:
+    def ingest(self, values, keys, client=None, seq=None) -> dict:
         """Aggregate one micro-batch (delta table) into the store.
 
         ``commit(prepare(values, keys))`` — the serial composition of the
-        two pipeline stages.  Returns ingest stats ``{rows, batches,
+        two pipeline stages, with the write-ahead log step between them
+        when a WAL is attached.  Returns ingest stats ``{rows, batches,
         pending, merged}``.  Empty deltas are accepted and ignored (a
         zero-row batch is the merge identity).  Any sequence of ``ingest``
         calls that delivers the same multiset of rows leaves the store in
         the bit-identical state.
+
+        ``client``/``seq`` tag the delivery for exactly-once commit: a
+        batch redelivered with a tag the store has seen (in memory, or in
+        a replayed WAL record after a crash) is acknowledged as
+        ``{"duplicate": True}`` without touching the state.
         """
+        meta = _delivery_meta(client, seq)
+        if meta is not None and self.dedup.seen(meta["client"],
+                                                meta["cseq"]):
+            obs_metrics.counter("stream_duplicate_deliveries_total").inc()
+            return {"rows": 0, "duplicate": True, "batches": self.batches,
+                    "pending": len(self._pending),
+                    "merged": self.merged_batches}
         with obs_trace.span("stream.ingest"):
             st = self.prepare(values, keys)
             n = int(np.asarray(values).shape[0]) if st is not None else 0
+            if not self._log_parts([(0, st, n)], meta):
+                obs_metrics.counter(
+                    "stream_duplicate_deliveries_total").inc()
+                return {"rows": 0, "duplicate": True,
+                        "batches": self.batches,
+                        "pending": len(self._pending),
+                        "merged": self.merged_batches}
             return self.commit(st, n)
 
     # Uniform shard interface (the pipelined service drives stores through
@@ -319,6 +467,7 @@ class StreamStore:
         extra = {"kind": "stream_store",
                  "sig": self.sig.to_json(),
                  "batches": self.batches,
+                 "wal_seq": self.wal_seq,
                  "fingerprints": self.fingerprints()}
         path = ckpt.save(directory, step, _state_tree(st), extra=extra,
                          keep=keep)
@@ -355,5 +504,66 @@ class StreamStore:
         store._state = _tree_state(tree, sig)
         store.batches = int(extra.get("batches", 0))
         store.merged_batches = store.batches
+        store.wal_seq = int(extra.get("wal_seq", 0))
         obs_metrics.counter("stream_restores_total").inc()
         return store
+
+    @classmethod
+    def recover(cls, wal, snapshot_dir: Optional[str] = None,
+                method: str = "auto", levels="auto",
+                check_finite: bool = False, coalesce="auto",
+                compiled: bool = True) -> "StreamStore":
+        """Rebuild a crashed store from durable state only: the newest
+        *verifiable* snapshot (value-fingerprint checked; corrupt or torn
+        snapshots are skipped, falling back to older ones or to an empty
+        store) plus an idempotent replay of every strictly newer WAL
+        record.  Opening the log truncates any torn tail first — with
+        ``fsync="always"`` a torn record was never acknowledged, so the
+        retrying client redelivers it and the dedup index (rebuilt from
+        record metas) keeps the commit exactly-once.  The result is
+        bit-identical to the uninterrupted run over the same acknowledged
+        batches (DESIGN.md §16.2), and the WAL stays attached for new
+        ingest."""
+        if not isinstance(wal, WriteAheadLog):
+            wal = WriteAheadLog(wal)
+        with obs_trace.span("stream.recover", wal_last_seq=wal.last_seq):
+            store = None
+            if snapshot_dir is not None:
+                store = _restore_best_snapshot(
+                    cls, snapshot_dir, wal.sig,
+                    dict(method=method, levels=levels,
+                         check_finite=check_finite, coalesce=coalesce,
+                         compiled=compiled))
+            if store is None:
+                store = cls(wal.sig.num_segments, aggs=wal.sig.aggs,
+                            spec=wal.sig.spec, method=method, levels=levels,
+                            check_finite=check_finite, coalesce=coalesce,
+                            compiled=compiled)
+            store._replay(wal, from_seq=store.wal_seq)
+            store._attach_wal(wal)
+        obs_metrics.counter("stream_recoveries_total").inc()
+        return store
+
+
+def _restore_best_snapshot(cls, directory: str, sig, kwargs):
+    """Newest snapshot in ``directory`` that restores *and* verifies, or
+    None.  A corrupted snapshot (bad npz sha, bad value fingerprint,
+    unreadable manifest) is skipped loudly, not trusted silently."""
+    import os
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted((int(d.split("_")[1]) for d in os.listdir(directory)
+                    if d.startswith("step_")), reverse=True)
+    for step in steps:
+        try:
+            store = cls.restore(directory, step=step, verify=True, **kwargs)
+        except Exception as e:  # corrupt/partial/foreign: fall back
+            obs_metrics.counter("stream_snapshot_rejects_total").inc()
+            obs_trace.event("stream.snapshot_rejected", step=step,
+                            error=f"{type(e).__name__}: {e}")
+            continue
+        if store.sig != sig:
+            obs_metrics.counter("stream_snapshot_rejects_total").inc()
+            continue
+        return store
+    return None

@@ -45,12 +45,15 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.ops.partial import (AggSignature, PartialState, empty_partial,
                                finalize, merge, merge_all, partial_agg)
-from repro.stream.store import _state_tree, _tree_state
+from repro.stream.store import (_DurableMixin, _delivery_meta,
+                                _restore_best_snapshot, _state_tree,
+                                _tree_state)
+from repro.stream.wal import WriteAheadLog
 
 __all__ = ["WindowedStore"]
 
 
-class WindowedStore:
+class WindowedStore(_DurableMixin):
     """Tumbling/sliding event-time windows over a row stream.
 
     Args:
@@ -60,12 +63,20 @@ class WindowedStore:
       retention: ring length — number of most-recent windows kept queryable
         (and the late-arrival horizon).  Sliding queries can span up to
         ``retention`` windows.
+      wal: optional write-ahead log (kind ``"window"``).  Unlike the flat
+        store, the logged unit is the raw ``(values, keys, times)`` batch
+        — acceptance and eviction depend on the watermark *at arrival*, so
+        replay must re-run the arrival sequence, not merge deltas
+        (DESIGN.md §16.4).  Replay in log order reproduces every
+        watermark, late-drop and eviction decision, hence the final ring,
+        bit for bit — including the order-dependent ``late_dropped``
+        counter.
     """
 
     def __init__(self, num_segments: int, aggs=("sum",),
                  spec: Optional[ReproSpec] = None, *, width: float,
                  retention: int = 8, method: str = "auto", levels="auto",
-                 check_finite: bool = False):
+                 check_finite: bool = False, wal=None):
         if width <= 0:
             raise ValueError("window width must be positive")
         if retention < 1:
@@ -84,6 +95,12 @@ class WindowedStore:
         self.late_dropped = 0                    # best-effort, order-dependent
         self.evictions = 0
         self.batches = 0
+        self._init_durability(wal)
+
+    _wal_kind = "window"
+
+    def _wal_params(self) -> dict:
+        return {"width": self.width, "retention": self.retention}
 
     # -- ingest ------------------------------------------------------------
 
@@ -113,11 +130,14 @@ class WindowedStore:
             return None
         return i
 
-    def ingest(self, values, keys, times) -> dict:
+    def ingest(self, values, keys, times, client=None, seq=None) -> dict:
         """Aggregate one micro-batch of (value row, key, event time).
 
         Rows are partitioned by window on the host, one partial per touched
-        window, each merged into its slot.  Returns
+        window, each merged into its slot.  With a WAL attached the
+        normalized batch is logged as one ``"rows"`` record *before* it
+        touches the ring.  ``client``/``seq`` tag the delivery for
+        exactly-once commit.  Returns
         ``{rows, accepted, late_dropped, watermark_wid}``.
         """
         v = np.asarray(values)
@@ -127,6 +147,22 @@ class WindowedStore:
         t = np.asarray(times, np.float64).reshape(-1)
         if not (v.shape[0] == k.shape[0] == t.shape[0]):
             raise ValueError("values/keys/times disagree on the row count")
+        meta = _delivery_meta(client, seq)
+        if meta is not None and self.dedup.seen(meta["client"],
+                                                meta["cseq"]):
+            obs_metrics.counter("stream_duplicate_deliveries_total").inc()
+            return {"rows": 0, "duplicate": True, "accepted": 0,
+                    "late_dropped": 0, "watermark_wid": self._max_wid}
+        if not self._log_record({"values": v, "keys": k, "times": t},
+                                "rows", dict(meta or {}), meta):
+            obs_metrics.counter("stream_duplicate_deliveries_total").inc()
+            return {"rows": 0, "duplicate": True, "accepted": 0,
+                    "late_dropped": 0, "watermark_wid": self._max_wid}
+        return self._apply(v, k, t)
+
+    def _apply(self, v, k, t) -> dict:
+        """Windowing proper, on normalized arrays — shared by live ingest
+        and WAL replay (so both take bit-identical decisions)."""
         n = int(v.shape[0])
         accepted = dropped = 0
         with obs_trace.span("stream.window_ingest", rows=n) as sp:
@@ -160,6 +196,13 @@ class WindowedStore:
         obs_metrics.counter("stream_window_late_total").inc(dropped)
         return {"rows": n, "accepted": accepted, "late_dropped": dropped,
                 "watermark_wid": self._max_wid}
+
+    def _apply_record(self, rec) -> None:
+        if rec.kind != "rows":
+            raise ValueError(f"cannot replay record kind {rec.kind!r} "
+                             "into a windowed store")
+        self._apply(rec.arrays["values"], rec.arrays["keys"],
+                    rec.arrays["times"])
 
     # -- query -------------------------------------------------------------
 
@@ -234,6 +277,7 @@ class WindowedStore:
                  "max_wid": self._max_wid,
                  "late_dropped": self.late_dropped,
                  "evictions": self.evictions, "batches": self.batches,
+                 "wal_seq": self.wal_seq,
                  "fingerprints": self.fingerprints()}
         path = ckpt.save(directory, step, tree, extra=extra, keep=keep)
         obs_metrics.counter("stream_snapshots_total").inc()
@@ -264,5 +308,42 @@ class WindowedStore:
         store.late_dropped = int(extra["late_dropped"])
         store.evictions = int(extra["evictions"])
         store.batches = int(extra["batches"])
+        store.wal_seq = int(extra.get("wal_seq", 0))
         obs_metrics.counter("stream_restores_total").inc()
+        return store
+
+    @classmethod
+    def recover(cls, wal, snapshot_dir: Optional[str] = None, *,
+                width: Optional[float] = None, retention: int = 8,
+                method: str = "auto", levels="auto",
+                check_finite: bool = False) -> "WindowedStore":
+        """Rebuild from (newest verifiable snapshot + WAL replay of the
+        strictly newer ``"rows"`` records, in log order).  ``width`` /
+        ``retention`` default to the log's header params (recorded at
+        creation), so recovery from a bare log is self-describing."""
+        if not isinstance(wal, WriteAheadLog):
+            wal = WriteAheadLog(wal, kind="window")
+        with obs_trace.span("stream.recover", wal_last_seq=wal.last_seq):
+            store = None
+            if snapshot_dir is not None:
+                store = _restore_best_snapshot(
+                    cls, snapshot_dir, wal.sig,
+                    dict(method=method, levels=levels,
+                         check_finite=check_finite))
+            if store is None:
+                width = width if width is not None else \
+                    wal.params.get("width")
+                retention = int(wal.params.get("retention", retention))
+                if width is None:
+                    raise ValueError(
+                        "recovering a windowed store without a usable "
+                        "snapshot requires width=... (the log header "
+                        "carries none)")
+                store = cls(wal.sig.num_segments, aggs=wal.sig.aggs,
+                            spec=wal.sig.spec, width=float(width),
+                            retention=retention, method=method,
+                            levels=levels, check_finite=check_finite)
+            store._replay(wal, from_seq=store.wal_seq)
+            store._attach_wal(wal)
+        obs_metrics.counter("stream_recoveries_total").inc()
         return store

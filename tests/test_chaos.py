@@ -1,0 +1,234 @@
+"""Deterministic chaos harness: crash/torn-write/corruption fault matrix
+over the durable stream stores.
+
+Every scenario drives the same at-least-once client loop — deliver batch
+``i`` tagged ``(client, i)``, on injected crash rebuild the store from
+durable state and retry — and then asserts the strongest property the
+paper's algebra affords: the final table and results fingerprints are
+**bit-identical** to the uninterrupted run, no matter where the fault
+landed (before the log write, after it, mid-commit, mid-snapshot) and no
+matter that retries re-delivered already-committed batches.
+
+Schedules are data (site, hit, action) and the injector RNG is seeded, so
+every failing run replays exactly; ``random_schedule`` sweeps are a pure
+function of the seed (DESIGN.md §16.5).
+"""
+import numpy as np
+import pytest
+
+from repro.runtime import faultinject
+from repro.stream import (ReplicatedStore, ShardedStreamStore, StreamStore,
+                          WindowedStore)
+
+G = 11
+AGGS = ("sum", "count", "mean", "min", "max")
+
+
+def _batches(nb=9, seed=0, n=900):
+    rng = np.random.default_rng(seed)
+    v = (rng.standard_normal((n, 1)) *
+         np.exp(rng.uniform(-8, 8, (n, 1)))).astype(np.float32)
+    k = rng.integers(0, G, n).astype(np.int32)
+    idx = np.array_split(np.arange(n), nb)
+    return [(v[i], k[i]) for i in idx]
+
+
+@pytest.fixture(scope="module")
+def reference():
+    batches = _batches()
+    ref = StreamStore(G, aggs=AGGS)
+    for b in batches:
+        ref.ingest(*b)
+    return batches, ref.fingerprints(), ref.rows
+
+
+def drive(make, recover, batches, inj, snap_at=None, max_crashes=16):
+    """The chaos client: at-least-once delivery with recovery on crash.
+
+    Returns the surviving store.  The loop never inspects what the fault
+    did — exactly like a real client it just retries the unacknowledged
+    batch against whatever ``recover()`` rebuilt, and the dedup index
+    decides whether the retry is fresh or a duplicate.
+    """
+    store = make()
+    crashes = 0
+    snapped = False
+    with faultinject.active(inj):
+        i = 0
+        while i < len(batches):
+            try:
+                if snap_at is not None and i == snap_at and not snapped:
+                    store.snapshot()
+                    snapped = True
+                store.ingest(*batches[i], client="chaos", seq=i)
+                i += 1
+            except faultinject.InjectedCrash:
+                crashes += 1
+                assert crashes <= max_crashes, "crash loop"
+                store = recover()
+    return store
+
+
+SCENARIOS = [
+    # (name, fault points) — hits are cumulative per site across retries
+    ("crash-before-log", [("wal.append", 4, "crash")]),
+    ("crash-after-log", [("wal.append.logged", 4, "crash")]),
+    ("torn-record", [("wal.append.logged", 4, "torn_tail")]),
+    ("crash-in-commit", [("store.commit", 5, "crash")]),
+    ("crash-mid-snapshot", [("ckpt.save", 0, "crash")]),
+    ("corrupt-snapshot", [("ckpt.saved", 0, "corrupt"),
+                          ("wal.append", 7, "crash")]),
+    ("double-crash", [("wal.append", 2, "crash"),
+                      ("wal.append.logged", 6, "crash")]),
+]
+
+
+@pytest.mark.parametrize("name,points", SCENARIOS,
+                         ids=[s[0] for s in SCENARIOS])
+@pytest.mark.parametrize("flavor", ["plain", "sharded"])
+def test_fault_matrix_recovers_bit_identical(reference, tmp_path, flavor,
+                                             name, points):
+    batches, want, want_rows = reference
+    wal, snaps = tmp_path / "a.wal", tmp_path / "snaps"
+    if flavor == "plain":
+        def make():
+            s = StreamStore(G, aggs=AGGS, wal=wal)
+            s.snapshot = lambda: StreamStore.snapshot(s, snaps)
+            return s
+
+        def recover():
+            s = StreamStore.recover(wal, snaps)
+            s.snapshot = lambda: StreamStore.snapshot(s, snaps)
+            return s
+    else:
+        def make():
+            s = ShardedStreamStore(G, aggs=AGGS, num_shards=3, wal=wal)
+            s.snapshot = lambda: ShardedStreamStore.snapshot(s, snaps)
+            return s
+
+        def recover():
+            # a shard count the writer never had: replay re-partitions
+            s = ShardedStreamStore.recover(wal, snaps, num_shards=2)
+            s.snapshot = lambda: ShardedStreamStore.snapshot(s, snaps)
+            return s
+    inj = faultinject.FaultInjector(points, seed=7)
+    store = drive(make, recover, batches, inj, snap_at=4)
+    assert inj.fired, f"scenario {name} never fired its fault"
+    assert store.fingerprints() == want
+    assert store.rows == want_rows
+    store.wal.close()
+
+
+def test_same_schedule_same_seed_replays_exactly(reference, tmp_path):
+    batches, want, _ = reference
+    points = [("wal.append.logged", 3, "torn_tail"),
+              ("store.commit", 7, "crash")]
+    fired, prints = [], []
+    for run in ("a", "b"):
+        wal = tmp_path / f"{run}.wal"
+        inj = faultinject.FaultInjector(points, seed=11)
+        store = drive(lambda: StreamStore(G, aggs=AGGS, wal=wal),
+                      lambda: StreamStore.recover(wal), batches, inj)
+        fired.append(inj.fired)
+        prints.append(store.fingerprints())
+        store.wal.close()
+    # the whole run — cut offsets included — is a function of the seed
+    assert fired[0] == fired[1] and len(fired[0]) == 2
+    assert prints[0] == prints[1] == want
+
+
+CATALOG = [
+    ("wal.append", ("crash",)),
+    ("wal.append.logged", ("crash", "torn_tail")),
+    ("store.commit", ("crash",)),
+    ("ckpt.save", ("crash",)),
+]
+
+
+def test_random_schedule_is_a_pure_function_of_seed():
+    a = faultinject.random_schedule(3, CATALOG, n_faults=3)
+    assert a == faultinject.random_schedule(3, CATALOG, n_faults=3)
+    assert all(p.action in dict(CATALOG)[p.site] for p in a)
+    distinct = {tuple(faultinject.random_schedule(s, CATALOG, 3))
+                for s in range(8)}
+    assert len(distinct) > 1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_seeded_chaos_sweep(reference, tmp_path, seed):
+    batches, want, want_rows = reference
+    wal, snaps = tmp_path / "a.wal", tmp_path / "snaps"
+    points = faultinject.random_schedule(seed, CATALOG, n_faults=2)
+
+    def make():
+        s = StreamStore(G, aggs=AGGS, wal=wal)
+        s.snapshot = lambda: StreamStore.snapshot(s, snaps)
+        return s
+
+    def recover():
+        s = StreamStore.recover(wal, snaps)
+        s.snapshot = lambda: StreamStore.snapshot(s, snaps)
+        return s
+
+    inj = faultinject.FaultInjector(points, seed=seed)
+    store = drive(make, recover, batches, inj, snap_at=4)
+    assert store.fingerprints() == want
+    assert store.rows == want_rows
+    store.wal.close()
+
+
+def test_windowed_chaos_preserves_decision_trail(tmp_path):
+    """Torn write mid-feed on the rows log: the recovered windowed store
+    reproduces watermark advancement, late drops and ring evictions —
+    arrival-order-dependent decisions, not just the merged tables."""
+    rng = np.random.default_rng(2)
+    feed, base = [], 0.0
+    for _ in range(10):
+        t = base + rng.uniform(-35.0, 15.0, 40)
+        v = (rng.standard_normal(40) *
+             np.exp(rng.uniform(-6, 6, 40))).astype(np.float32)
+        k = rng.integers(0, 5, 40).astype(np.int32)
+        feed.append((v, k, t))
+        base += rng.uniform(0.0, 18.0)
+    plain = WindowedStore(5, aggs=("sum", "count"), width=4.0, retention=6)
+    for b in feed:
+        plain.ingest(*b)
+    assert plain.late_dropped > 0 and plain.evictions > 0
+    wal = tmp_path / "w.wal"
+    inj = faultinject.FaultInjector(
+        [("wal.append.logged", 5, "torn_tail")], seed=3)
+    store = drive(
+        lambda: WindowedStore(5, aggs=("sum", "count"), width=4.0,
+                              retention=6, wal=wal),
+        lambda: WindowedStore.recover(wal), feed, inj)
+    assert len(inj.fired) == 1
+    assert store.fingerprints() == plain.fingerprints()
+    assert (store.late_dropped, store.evictions, store._wids) == \
+        (plain.late_dropped, plain.evictions, plain._wids)
+    store.wal.close()
+
+
+def test_failover_mid_stream_under_injected_crash(reference, tmp_path):
+    """Primary dies on an injected crash mid-stream; the client retries
+    the unacknowledged batch against the promoted follower.  End state is
+    bit-identical to the uninterrupted single-store run."""
+    batches, want, want_rows = reference
+    rep = ReplicatedStore(G, aggs=AGGS, wal_path=tmp_path / "r.wal",
+                          snapshot_dir=tmp_path / "snaps")
+    inj = faultinject.FaultInjector([("wal.append", 5, "crash")], seed=0)
+    with faultinject.active(inj):
+        i = 0
+        while i < len(batches):
+            try:
+                rep.ingest(*batches[i], client="chaos", seq=i)
+                i += 1
+            except faultinject.InjectedCrash:
+                rep.crash_primary()
+                report = rep.promote()
+                assert report["promoted"]
+    assert len(inj.fired) == 1
+    assert rep.fingerprints() == want
+    assert rep.primary.rows == want_rows
+    assert rep.ingest(*batches[0], client="chaos",
+                      seq=0)["duplicate"] is True
+    rep.primary.wal.close()
